@@ -1,0 +1,39 @@
+"""Paper Fig. 12: communication time per round and cumulative, per
+framework (QFL < Async < Seq/Sim ordering) and per security stack."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_frameworks import run
+
+
+def comm_times(dataset="statlog", **kw):
+    out = run(dataset=dataset, **kw)
+    rows = {}
+    for label, fw in out["frameworks"].items():
+        rows[label] = {
+            "comm_total_s": fw["comm_time_total_s"],
+            "security_total_s": fw["security_time_total_s"],
+        }
+    return {"dataset": dataset, "comm": rows}
+
+
+def security_overhead(**kw):
+    base = run(modes={"none": "sim"}, security="none", **kw)
+    qkd = run(modes={"qkd": "sim"}, security="qkd", **kw)
+    tp = run(modes={"teleport": "sim"}, security="teleport", **kw)
+    return {
+        "none_s": base["frameworks"]["none"]["comm_time_total_s"],
+        "qkd_s": qkd["frameworks"]["qkd"]["comm_time_total_s"],
+        "teleport_s": tp["frameworks"]["teleport"]["comm_time_total_s"],
+        "qkd_overhead_s": qkd["frameworks"]["qkd"]["security_time_total_s"],
+        "tp_overhead_s": tp["frameworks"]["teleport"]["security_time_total_s"],
+    }
+
+
+def quick():
+    out = comm_times(n_sats=12, n_rounds=2, local_steps=3, qubits=4)
+    c = out["comm"]
+    ordered = (c["QFL"]["comm_total_s"] < c["QFL-Seq"]["comm_total_s"]
+               and c["QFL"]["comm_total_s"] < c["QFL-Sim"]["comm_total_s"])
+    return out, f"qfl_fastest={ordered}"

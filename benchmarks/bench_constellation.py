@@ -1,0 +1,51 @@
+"""Paper §IV-A / Table II / Fig 13: the 50-satellite scenario — primary /
+secondary partition, per-main assignments, access statistics."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.constellation import (
+    access_windows, assign_secondaries, build_trace, isl_routes,
+    partition_roles,
+)
+
+
+def scenario(n_sats: int = 50, duration_s: float = 6 * 3600, step_s: float = 30,
+             min_elev_deg: float = 0.0, seed: int = 0):
+    # min_elev 0° = geometric LoS, matching the paper's "90° max view angle"
+    # sensor model (§IV-A): 50 sats -> 21/29 vs the paper's 22/28.
+    trace = build_trace(n_sats=n_sats, n_planes=10, duration_s=duration_s,
+                        step_s=step_s, min_elev_deg=min_elev_deg, seed=seed)
+    p0, s0 = partition_roles(trace, 0)
+    assign, unreachable = assign_secondaries(trace, 0)
+    part, hops, lat = isl_routes(trace, 0)
+
+    prim_counts = [len(partition_roles(trace, t)[0])
+                   for t in range(0, trace.n_steps, 10)]
+    window_lens = []
+    for sat in range(0, n_sats, 5):
+        for (t0, t1) in access_windows(trace, sat):
+            window_lens.append(t1 - t0)
+
+    return {
+        "n_sats": n_sats,
+        "primaries_t0": int(len(p0)),
+        "secondaries_t0": int(len(s0)),
+        "paper_reference": "50 sats -> ~22 primary / ~28 secondary (§I-B)",
+        "assignments_t0": {str(k): len(v) for k, v in assign.items()},
+        "unreachable_t0": len(unreachable),
+        "participation_t0": int(part.sum()),
+        "max_hops": float(np.nanmax(np.where(np.isfinite(hops), hops,
+                                             np.nan))),
+        "mean_isl_latency_ms": float(np.nanmean(
+            np.where(np.isfinite(lat), lat, np.nan)) * 1e3),
+        "primary_count_mean": float(np.mean(prim_counts)),
+        "primary_count_std": float(np.std(prim_counts)),
+        "gs_window_mean_s": float(np.mean(window_lens)) if window_lens else 0,
+    }
+
+
+def quick():
+    out = scenario(n_sats=50, duration_s=1800, step_s=60)
+    return out, (f"{out['primaries_t0']}p/{out['secondaries_t0']}s "
+                 f"(paper ~22/28)")

@@ -1,0 +1,71 @@
+"""Paper Table IV / Figs 6-7: QFL vs QFL-Async / QFL-Seq / QFL-Sim on the
+Statlog and EuroSAT workloads — server + device accuracy/loss and the
+cumulative communication time per framework."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.constellation import build_trace
+from repro.core import SatQFLConfig, SatQFLTrainer
+from repro.data import dirichlet_partition, make_eurosat, make_statlog, \
+    server_split
+from repro.models import get_config, get_model
+
+MODES = {"QFL": "qfl", "QFL-Async": "async", "QFL-Seq": "seq",
+         "QFL-Sim": "sim"}
+
+
+def run(dataset: str = "statlog", n_sats: int = 20, n_rounds: int = 8,
+        local_steps: int = 8, qubits: int = 6, security: str = "none",
+        seed: int = 0, modes=None):
+    cfg = get_config("vqc-satqfl").replace(
+        vqc_qubits=qubits, vqc_layers=2, n_features=qubits,
+        n_classes=7 if dataset == "statlog" else 10)
+    api = get_model(cfg)
+    if dataset == "statlog":
+        X, y = make_statlog(n_features=qubits, seed=seed)
+    else:
+        X, y = make_eurosat(n_features=qubits, seed=seed, n_samples=6000)
+    Xc, yc, server = server_split(X, y, seed=seed)
+    trace = build_trace(n_sats=n_sats, n_planes=5, duration_s=6 * 3600,
+                        step_s=30, seed=seed)
+    sats = dirichlet_partition(Xc, yc, n_sats, seed=seed)
+
+    table = {}
+    for label, mode in (modes or MODES).items():
+        fl = SatQFLConfig(mode=mode, n_rounds=n_rounds,
+                          local_steps=local_steps, batch_size=32,
+                          security=security, seed=seed)
+        tr = SatQFLTrainer(cfg, api, fl, trace, sats, server)
+        hist = tr.run()
+        table[label] = {
+            "server_val_acc_avg": float(np.nanmean(
+                [m.server_val_acc for m in hist])),
+            "server_val_acc_final": hist[-1].server_val_acc,
+            "server_test_acc_avg": float(np.nanmean(
+                [m.server_test_acc for m in hist])),
+            "server_test_acc_final": hist[-1].server_test_acc,
+            "server_val_loss_avg": float(np.nanmean(
+                [m.server_val_loss for m in hist])),
+            "server_val_loss_final": hist[-1].server_val_loss,
+            "dev_train_acc_avg": float(np.nanmean(
+                [m.dev_train_acc for m in hist])),
+            "dev_val_loss_avg": float(np.nanmean(
+                [m.dev_val_loss for m in hist])),
+            "comm_time_total_s": float(sum(m.comm_s for m in hist)),
+            "security_time_total_s": float(sum(m.security_s for m in hist)),
+            "participants_per_round": float(np.mean(
+                [m.participants for m in hist])),
+            "curve_val_acc": [m.server_val_acc for m in hist],
+            "curve_val_loss": [m.server_val_loss for m in hist],
+        }
+    return {"dataset": dataset, "n_sats": n_sats, "n_rounds": n_rounds,
+            "frameworks": table}
+
+
+def quick():
+    out = run(dataset="statlog", n_sats=12, n_rounds=2, local_steps=4,
+              qubits=4)
+    best = max(out["frameworks"], key=lambda k:
+               out["frameworks"][k]["server_val_acc_final"])
+    return out, f"best={best}"

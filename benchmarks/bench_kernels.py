@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: functional timings only —
+the TPU perf story lives in §Roofline; these catch gross regressions and
+give the ref-vs-kernel call-overhead shape)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels import apply_gate, otp_xor_mac, ssd_scan, swa_attention
+from repro.kernels.swa_attention.ref import swa_attention_ref
+from repro.models.blocks import ssd_ref
+from repro.quantum import statevector as sv
+from repro.security.mac import poly_mac_u32
+
+
+def bench_otp(n=65536):
+    key = jax.random.key(0)
+    msg = jax.random.bits(key, (n,), jnp.uint32)
+    pad = jax.random.bits(jax.random.fold_in(key, 1), (n,), jnp.uint32)
+    f = jax.jit(lambda m, p: otp_xor_mac(m, p, jnp.uint32(1), jnp.uint32(2)))
+    us = time_call(f, msg, pad, iters=3)
+    f_ref = jax.jit(lambda m, p: (m ^ p, poly_mac_u32(m ^ p, jnp.uint32(1),
+                                                      jnp.uint32(2))))
+    us_ref = time_call(f_ref, msg, pad, iters=3)
+    return {"kernel_us": us, "ref_us": us_ref, "words": n}
+
+
+def bench_gate(nq=14):
+    key = jax.random.key(1)
+    re, im = jax.random.normal(key, (2, 2 ** nq))
+    state = ((re + 1j * im) / jnp.linalg.norm(re + 1j * im)).astype(jnp.complex64)
+    g = sv.u3_gate(0.5, 0.2, -0.1)
+    f_k = jax.jit(lambda s: apply_gate(s, g, nq // 2))
+    f_r = jax.jit(lambda s: sv.apply_1q(s, g, nq // 2))
+    return {"kernel_us": time_call(f_k, state, iters=3),
+            "ref_us": time_call(f_r, state, iters=3), "qubits": nq}
+
+
+def bench_swa(S=512, W=128):
+    key = jax.random.key(2)
+    q = 0.3 * jax.random.normal(key, (2, S, 4, 64))
+    k = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (2, S, 4, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, S, 4, 64))
+    f_k = jax.jit(lambda a, b, c: swa_attention(a, b, c, window=W))
+    from repro.kernels.swa_attention.ops import _fold, _unfold
+    f_r = jax.jit(lambda a, b, c: _unfold(
+        swa_attention_ref(_fold(a), _fold(b), _fold(c), window=W), 2, 4))
+    return {"kernel_us": time_call(f_k, q, k, v, iters=3),
+            "ref_us": time_call(f_r, q, k, v, iters=3), "S": S, "W": W}
+
+
+def bench_ssd(S=512):
+    key = jax.random.key(3)
+    x = 0.3 * jax.random.normal(key, (1, S, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (1, S, 4)))
+    A = -jnp.exp(0.3 * jax.random.normal(jax.random.fold_in(key, 2), (4,)))
+    Bv = 0.3 * jax.random.normal(jax.random.fold_in(key, 3), (1, S, 1, 32))
+    Cv = 0.3 * jax.random.normal(jax.random.fold_in(key, 4), (1, S, 1, 32))
+    f_k = jax.jit(lambda *a: ssd_scan(*a, chunk=128))
+    f_r = jax.jit(lambda *a: ssd_ref(*a, chunk=128))
+    return {"kernel_us": time_call(f_k, x, dt, A, Bv, Cv, iters=3),
+            "ref_us": time_call(f_r, x, dt, A, Bv, Cv, iters=3), "S": S}
+
+
+def quick():
+    out = {"otp": bench_otp(16384), "gate": bench_gate(12),
+           "swa": bench_swa(256, 64), "ssd": bench_ssd(256)}
+    return out, "interpret-mode"

@@ -1,0 +1,36 @@
+"""Paper Figs 8-11: teleportation and QKD/QKD-Fernet variants — accuracy
+parity (security must be learning-transparent) + measured overhead."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_frameworks import run
+
+
+def teleport(dataset="statlog", **kw):
+    """QFL vs QFL-TP (Figs 8-9)."""
+    out = run(dataset=dataset,
+              modes={"QFL": "sim"}, security="none", **kw)
+    out_tp = run(dataset=dataset,
+                 modes={"QFL-TP": "sim"}, security="teleport", **kw)
+    out["frameworks"].update(out_tp["frameworks"])
+    return out
+
+
+def qkd(dataset="statlog", **kw):
+    """QFL vs QFL-QKD vs QFL-QKD-Fernet (Figs 10-11)."""
+    o1 = run(dataset=dataset, modes={"QFL": "sim"}, security="none", **kw)
+    o2 = run(dataset=dataset, modes={"QFL-QKD": "sim"}, security="qkd", **kw)
+    o3 = run(dataset=dataset, modes={"QFL-QKD-Fernet": "sim"},
+             security="qkd_fernet", **kw)
+    o1["frameworks"].update(o2["frameworks"])
+    o1["frameworks"].update(o3["frameworks"])
+    return o1
+
+
+def quick():
+    t = teleport(n_sats=10, n_rounds=2, local_steps=3, qubits=4)
+    fw = t["frameworks"]
+    acc_delta = abs(fw["QFL"]["server_val_acc_final"]
+                    - fw["QFL-TP"]["server_val_acc_final"])
+    return t, f"tp_acc_delta={acc_delta:.4f}"

@@ -1,0 +1,37 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock microseconds per call (blocking on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def csv_row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,49 @@
+"""Render baseline vs optimized (seq_attn) sweep comparison markdown.
+
+PYTHONPATH=src python -m benchmarks.compare_sweeps >> EXPERIMENTS.md
+"""
+import json
+import sys
+
+
+def main(base="results/dryrun_all.json",
+         opt="results/dryrun_all_optimized.json"):
+    b = {(r["arch"], r["shape"], r["mesh"]): r
+         for r in json.load(open(base))["records"]}
+    o = {(r["arch"], r["shape"], r["mesh"]): r
+         for r in json.load(open(opt))["records"]}
+
+    print("\n### Baseline vs optimized (seq_attn default) — single-pod, "
+          "train/prefill shapes\n")
+    print("| arch | shape | X base | X opt | Δ | dominant (opt) |")
+    print("|---|---|---|---|---|---|")
+    rows = []
+    for key in sorted(b):
+        arch, shape, mesh = key
+        if mesh != "single" or b[key]["mode"] == "decode":
+            continue
+        xb, xo = b[key]["collective_s"], o[key]["collective_s"]
+        delta = (xo - xb) / xb * 100 if xb else 0.0
+        rows.append((arch, shape, xb, xo, delta, o[key]["dominant"]))
+    for arch, shape, xb, xo, d, dom in rows:
+        print(f"| {arch} | {shape} | {xb*1e3:.0f} ms | {xo*1e3:.0f} ms "
+              f"| {d:+.0f}% | {dom} |")
+
+    import statistics
+    deltas = [r[4] for r in rows]
+    print(f"\nmedian Δ collective term: {statistics.median(deltas):+.0f}% "
+          f"over {len(rows)} train/prefill pairs")
+
+    print("\n### Multi-pod (512-chip) spot checks\n")
+    print("| arch | shape | X base | X opt |")
+    print("|---|---|---|---|")
+    for key in sorted(b):
+        arch, shape, mesh = key
+        if mesh != "multi" or shape != "train_4k":
+            continue
+        print(f"| {arch} | {shape} | {b[key]['collective_s']*1e3:.0f} ms "
+              f"| {o[key]['collective_s']*1e3:.0f} ms |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

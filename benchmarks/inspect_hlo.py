@@ -1,0 +1,58 @@
+"""Dev tool: dump top HLO buffers + collective schedule for one combo.
+
+PYTHONPATH=src python -m benchmarks.inspect_hlo <arch> <shape> [fsdp]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+import re
+import sys
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.launch.mesh import make_production_mesh, data_axes_for
+from repro.launch.steps import build_bundle
+from repro.sharding.context import DistCtx
+
+BYTES = {"bf16": 2, "f32": 4, "s32": 4, "u32": 4, "pred": 1, "f16": 2,
+         "s8": 1, "u8": 1}
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    fsdp = len(sys.argv) > 3 and sys.argv[3] == "fsdp"
+    mesh = make_production_mesh()
+    ctx = DistCtx(mesh=mesh, data_axes=data_axes_for(mesh), fsdp=fsdp)
+    b = build_bundle(arch, shape, ctx)
+    in_sh = tuple(jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), sp)
+                  for sp in b.in_specs)
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[b.mode]
+    with mesh:
+        compiled = jax.jit(b.step_fn, in_shardings=in_sh,
+                           donate_argnums=donate).lower(*b.arg_shapes).compile()
+    m = compiled.memory_analysis()
+    print(f"temp {m.temp_size_in_bytes/2**30:.2f} GiB  "
+          f"args {m.argument_size_in_bytes/2**30:.2f}  "
+          f"out {m.output_size_in_bytes/2**30:.2f}  "
+          f"alias {m.alias_size_in_bytes/2**30:.2f}")
+    hlo = compiled.as_text()
+    sizes = {}
+    for mm in re.finditer(r"([a-z0-9]+)\[([0-9,]+)\]", hlo):
+        if mm.group(1) not in BYTES:
+            continue
+        n = 1
+        for d in mm.group(2).split(","):
+            n *= int(d)
+        key = f"{mm.group(1)}[{mm.group(2)}]"
+        sizes[key] = n * BYTES[mm.group(1)]
+    for k, v in sorted(sizes.items(), key=lambda kv: -kv[1])[:12]:
+        cnt = len(re.findall(re.escape(k) + r"[{ ]", hlo))
+        print(f"{v/2**30:8.2f} GiB x{cnt:3d}  {k}")
+    path = f"/tmp/hlo_{arch}_{shape}.txt"
+    open(path, "w").write(hlo)
+    print("hlo ->", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""§Roofline report: consume the dry-run JSON, print the full baseline
+table, and pick the three hillclimb candidates (worst roofline fraction,
+most collective-bound, most representative of the paper's technique).
+
+    PYTHONPATH=src python -m benchmarks.roofline [results/dryrun_all.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(path="results/dryrun_all.json"):
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(records, mesh="single"):
+    rows = [r for r in records if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def fmt_row(r):
+    return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+            f"C={r['compute_s']*1e3:10.3f}ms M={r['memory_s']*1e3:9.3f}ms "
+            f"X={r['collective_s']*1e3:10.3f}ms {r['dominant']:10s} "
+            f"useful={r['useful_ratio']:.3f} "
+            f"fits={'Y' if r['fits_hbm'] else 'N'}")
+
+
+def hillclimb_candidates(records):
+    """worst roofline fraction = dominant term most above the best term;
+    most collective-bound = max X/(C+M); representative = a train-shape MoE
+    (expert-parallel all-to-all is where the FL-hierarchy mapping bites)."""
+    singles = [r for r in records if r["mesh"] == "single"]
+
+    def frac(r):
+        tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        return max(r["compute_s"], r["memory_s"], r["collective_s"]) / max(tot, 1e-12)
+
+    def coll_ratio(r):
+        return r["collective_s"] / max(r["compute_s"] + r["memory_s"], 1e-12)
+
+    worst = max(singles, key=frac)
+    coll = max(singles, key=coll_ratio)
+    moe_train = [r for r in singles
+                 if r["shape"] == "train_4k" and "moe" in r["arch"]]
+    rep = max(moe_train, key=lambda r: r["collective_s"]) if moe_train else \
+        singles[0]
+    picks = []
+    seen = set()
+    for r in (coll, worst, rep):
+        key = (r["arch"], r["shape"])
+        if key not in seen:
+            seen.add(key)
+            picks.append(r)
+    # backfill if dedup removed entries
+    for r in sorted(singles, key=coll_ratio, reverse=True):
+        if len(picks) >= 3:
+            break
+        key = (r["arch"], r["shape"])
+        if key not in seen:
+            seen.add(key)
+            picks.append(r)
+    return picks
+
+
+def main(path="results/dryrun_all.json"):
+    data = load(path)
+    records = data["records"]
+    print(f"== Roofline baselines ({len(records)} records, "
+          f"{len(data['failures'])} failures) ==")
+    for mesh in ("single", "multi"):
+        print(f"\n-- mesh: {mesh} --")
+        for r in table(records, mesh):
+            print(fmt_row(r))
+    if data["failures"]:
+        print("\n-- FAILURES --")
+        for f_ in data["failures"]:
+            print(f_)
+    print("\n== Hillclimb candidates (see EXPERIMENTS §Perf) ==")
+    for r in hillclimb_candidates(records):
+        print(" *", fmt_row(r))
+
+
+def quick():
+    path = "results/dryrun_all.json"
+    if not os.path.exists(path):
+        return {"status": "dry-run results not present"}, "skipped"
+    data = load(path)
+    n_fit = sum(r["fits_hbm"] for r in data["records"])
+    return ({"records": len(data["records"]),
+             "failures": len(data["failures"]), "fits": n_fit},
+            f"{n_fit}/{len(data['records'])} fit")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

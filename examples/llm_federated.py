@@ -1,0 +1,65 @@
+"""Beyond-paper: sat-QFL with an LLM as the satellites' local model — the
+in-graph stacked-satellite round (the production-mesh formulation) training
+a reduced qwen3 on synthetic tokens, with secure aggregation.
+
+    PYTHONPATH=src python examples/llm_federated.py [--rounds 3]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SatQFLConfig
+from repro.core.dist import fl_init_state, make_fl_round
+from repro.core.round import evaluate
+from repro.data import lm_batches, synthetic_corpus
+from repro.models import get_config, get_model, smoke_variant
+from repro.nn.optim import sgd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--sats", type=int, default=4)
+    ap.add_argument("--security", default="secagg",
+                    choices=["none", "otp", "secagg"])
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config("qwen3-0.6b"))
+    api = get_model(cfg)
+    n_sats, E, Bn, S = args.sats, 3, 4, 64
+    fl = SatQFLConfig(mode="sim", local_steps=E, batch_size=Bn, lr=5e-2)
+    opt = sgd(fl.lr)
+    state = fl_init_state(cfg, api, opt, n_sats, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
+    print(f"== federated {cfg.name} (smoke): {n_sats} satellites x "
+          f"{n_params // n_sats / 1e6:.1f}M params, security={args.security}")
+
+    round_fn = jax.jit(make_fl_round(cfg, api, fl, opt, n_sats,
+                                     security=args.security))
+    corpus = synthetic_corpus(200_000, cfg.vocab_size)
+    rng = np.random.default_rng(0)
+    seeds = jnp.asarray(rng.integers(0, 2**32, n_sats, dtype=np.uint32))
+
+    eval_batch = next(lm_batches(corpus, 8, S, 1, seed=99))
+    for r in range(args.rounds):
+        per_sat = [list(lm_batches(corpus, Bn, S, E, seed=100 * r + i))
+                   for i in range(n_sats)]
+        batches = {
+            "tokens": jnp.stack([jnp.stack([b["tokens"] for b in bs])
+                                 for bs in per_sat]),
+            "labels": jnp.stack([jnp.stack([b["labels"] for b in bs])
+                                 for bs in per_sat]),
+        }
+        mask = jnp.ones((n_sats,), jnp.float32)
+        state, metrics = round_fn(state, batches, mask, seeds)
+        g_params = jax.tree_util.tree_map(lambda x: x[0], state.params)
+        vl, va = evaluate(api, cfg, g_params, eval_batch)
+        print(f"round {r}: local_loss={float(metrics['loss']):.4f} "
+              f"global_eval_loss={vl:.4f} token_acc={va:.3f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

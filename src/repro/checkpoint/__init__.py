@@ -1,0 +1,6 @@
+from repro.checkpoint.io import (
+    save_checkpoint, load_checkpoint, latest_step, CheckpointManager,
+)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "CheckpointManager"]

@@ -1,0 +1,149 @@
+"""Checkpointing: params / optimizer / FL-round state to disk.
+
+msgpack container with a JSON-able tree skeleton + raw little-endian array
+payloads (bf16 stored as uint16 views — msgpack has no bf16). Works for any
+pytree the framework produces (model params, OptState, FLState, the host
+trainer's per-satellite states). Integrity: a GF(2³¹−1) polynomial MAC of
+the payload bytes rides in the header (the same primitive the satellites
+use on the wire — a corrupted checkpoint fails loudly).
+
+Layout:  <dir>/step_<n>.msgpack   (+ step_<n>.msgpack.tmp during write)
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _encode_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if str(arr.dtype) == _BF16:
+        return {"dtype": _BF16, "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": np.ascontiguousarray(arr).tobytes()}
+
+
+def _decode_leaf(rec: dict):
+    shape = tuple(rec["shape"])
+    if rec["dtype"] == _BF16:
+        u = np.frombuffer(rec["data"], np.uint16).reshape(shape)
+        return jnp.asarray(u).view(jnp.bfloat16)
+    return jnp.asarray(
+        np.frombuffer(rec["data"], np.dtype(rec["dtype"])).reshape(shape))
+
+
+def _mac_bytes(payload: bytes) -> int:
+    from repro.security.mac import poly_mac_u32
+    n = len(payload)
+    pad = (-n) % 4
+    words = np.frombuffer(payload + b"\x00" * pad, np.uint32)
+    if words.size == 0:
+        return 0
+    return int(poly_mac_u32(jnp.asarray(words), jnp.uint32(0x5a5a5a5a),
+                            jnp.uint32(n & 0x7FFFFFFF)))
+
+
+def save_checkpoint(path_dir: str, step: int, tree, metadata: dict | None = None):
+    """Atomically write the pytree for `step`. Returns the file path."""
+    os.makedirs(path_dir, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = msgpack.packb({
+        "leaves": [_encode_leaf(x) for x in leaves],
+    }, use_bin_type=True)
+    doc = msgpack.packb({
+        "version": 1,
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "metadata": metadata or {},
+        "mac": _mac_bytes(payload),
+        "payload": payload,
+    }, use_bin_type=True)
+    path = os.path.join(path_dir, f"step_{step:08d}.msgpack")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(doc)
+    os.replace(tmp, path)
+    return path
+
+
+class CheckpointCorrupt(Exception):
+    pass
+
+
+def load_checkpoint(path_dir: str, like, step: int | None = None):
+    """Load into the structure of `like` (shapes/dtypes verified).
+
+    step=None loads the latest. Returns (tree, step, metadata)."""
+    if step is None:
+        step = latest_step(path_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {path_dir}")
+    path = os.path.join(path_dir, f"step_{step:08d}.msgpack")
+    with open(path, "rb") as f:
+        doc = msgpack.unpackb(f.read(), raw=False)
+    if _mac_bytes(doc["payload"]) != doc["mac"]:
+        raise CheckpointCorrupt(f"MAC mismatch in {path}")
+    rec = msgpack.unpackb(doc["payload"], raw=False)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    if len(leaves_like) != doc["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {doc['n_leaves']} leaves, template has "
+            f"{len(leaves_like)}")
+    out = []
+    for tmpl, enc in zip(leaves_like, rec["leaves"]):
+        leaf = _decode_leaf(enc)
+        if tuple(leaf.shape) != tuple(tmpl.shape) or \
+                str(leaf.dtype) != str(tmpl.dtype):
+            raise ValueError(
+                f"leaf mismatch: ckpt {leaf.shape}/{leaf.dtype} vs "
+                f"template {tmpl.shape}/{tmpl.dtype}")
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out), step, doc["metadata"]
+
+
+_STEP_RE = re.compile(r"step_(\d+)\.msgpack$")
+
+
+def latest_step(path_dir: str):
+    if not os.path.isdir(path_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path_dir)
+             if (m := _STEP_RE.match(f))]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Keep-last-N manager with async-style usage (save is synchronous —
+    this is a CPU container; swap in an async writer on real hardware)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+
+    def save(self, step: int, tree, metadata=None):
+        path = save_checkpoint(self.dir, step, tree, metadata)
+        self._gc()
+        return path
+
+    def restore(self, like, step=None):
+        return load_checkpoint(self.dir, like, step)
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for f in os.listdir(self.dir)
+            if (m := _STEP_RE.match(f)))
+        for s in steps[:-self.keep]:
+            os.remove(os.path.join(self.dir, f"step_{s:08d}.msgpack"))
+
+    @property
+    def latest(self):
+        return latest_step(self.dir)

@@ -1,0 +1,4 @@
+"""Assigned architecture configs (one module per arch) + input shapes."""
+from repro.configs.shapes import INPUT_SHAPES, shape_for, cfg_for_shape
+
+__all__ = ["INPUT_SHAPES", "shape_for", "cfg_for_shape"]

@@ -1,0 +1,28 @@
+"""Constellation substrate: orbit propagation, LoS access, sat-QFL topology.
+
+The paper derives its scenario from Starlink TLEs (50/100 satellites, 10
+ground stations, 6 h window, 30 s sampling). Offline, we generate a
+Walker-delta constellation with Starlink's shell parameters (550 km, 53°)
+and propagate it with Keplerian dynamics in JAX; the access/visibility and
+primary/secondary partitioning logic then matches the paper's §I-B
+formulation exactly (H(t) graph, S_p(t)/S_s(t), participation P_i(t)).
+"""
+from repro.constellation.orbits import (
+    walker_constellation, propagate, ground_station_eci, GROUND_STATIONS,
+    EARTH_RADIUS_KM,
+)
+from repro.constellation.visibility import (
+    sat_ground_access, sat_sat_access, elevation_angle,
+)
+from repro.constellation.topology import (
+    ConstellationTrace, build_trace, partition_roles, access_windows,
+    participation_series, assign_secondaries, isl_routes,
+)
+
+__all__ = [
+    "walker_constellation", "propagate", "ground_station_eci",
+    "GROUND_STATIONS", "EARTH_RADIUS_KM",
+    "sat_ground_access", "sat_sat_access", "elevation_angle",
+    "ConstellationTrace", "build_trace", "partition_roles", "access_windows",
+    "participation_series", "assign_secondaries", "isl_routes",
+]

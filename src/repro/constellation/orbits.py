@@ -1,0 +1,102 @@
+"""Keplerian orbit propagation (JAX) + ground-station kinematics.
+
+Circular-orbit two-body propagation is sufficient for access-window
+derivation at the paper's fidelity (30 s sampling over 6 h; J2 drift over
+6 h is ≲0.2° and does not change window structure). Positions are in ECI;
+ground stations rotate with Earth.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EARTH_RADIUS_KM = 6378.137
+MU_EARTH = 398600.4418           # km^3 / s^2
+EARTH_ROT_RATE = 7.2921159e-5    # rad / s
+
+# The paper's 10 ground stations (§IV-A names Tokyo, LA, Madrid, Toronto,
+# Santiago, Frankfurt, Sydney, Bangalore, ... — we complete the set of 10).
+GROUND_STATIONS = {
+    "Tokyo": (35.6762, 139.6503),
+    "LosAngeles": (34.0522, -118.2437),
+    "Madrid": (40.4168, -3.7038),
+    "Toronto": (43.6532, -79.3832),
+    "Santiago": (-33.4489, -70.6693),
+    "Frankfurt": (50.1109, 8.6821),
+    "Sydney": (-33.8688, 151.2093),
+    "Bangalore": (12.9716, 77.5946),
+    "Nairobi": (-1.2921, 36.8219),
+    "Anchorage": (61.2181, -149.9003),
+}
+
+
+class OrbitalElements(NamedTuple):
+    """Circular-orbit elements, one entry per satellite (arrays of shape (n,))."""
+    sma_km: jax.Array        # semi-major axis
+    inc_rad: jax.Array       # inclination
+    raan_rad: jax.Array      # right ascension of ascending node
+    anom0_rad: jax.Array     # argument of latitude at epoch
+
+
+def walker_constellation(n_sats: int, n_planes: int, inc_deg: float = 53.0,
+                         alt_km: float = 550.0, phasing: int = 1,
+                         jitter_seed: int | None = 0,
+                         jitter_deg: float = 1.5) -> OrbitalElements:
+    """Walker-delta pattern with Starlink shell-1 parameters by default.
+
+    A little phase jitter (seeded) de-idealizes the pattern so access
+    windows resemble the paper's TLE-derived irregularity.
+    """
+    per_plane = int(math.ceil(n_sats / n_planes))
+    plane_idx = np.arange(n_sats) // per_plane
+    slot_idx = np.arange(n_sats) % per_plane
+    raan = 2 * np.pi * plane_idx / n_planes
+    anom = (2 * np.pi * slot_idx / per_plane
+            + 2 * np.pi * phasing * plane_idx / n_sats)
+    if jitter_seed is not None:
+        rng = np.random.default_rng(jitter_seed)
+        anom = anom + np.deg2rad(rng.normal(0, jitter_deg, n_sats))
+        raan = raan + np.deg2rad(rng.normal(0, jitter_deg / 3, n_sats))
+    sma = np.full(n_sats, EARTH_RADIUS_KM + alt_km)
+    inc = np.full(n_sats, np.deg2rad(inc_deg))
+    return OrbitalElements(
+        sma_km=jnp.asarray(sma, jnp.float32),
+        inc_rad=jnp.asarray(inc, jnp.float32),
+        raan_rad=jnp.asarray(raan, jnp.float32),
+        anom0_rad=jnp.asarray(anom, jnp.float32),
+    )
+
+
+def propagate(elements: OrbitalElements, times_s: jax.Array) -> jax.Array:
+    """ECI positions (n_sats, n_times, 3) km at the given times (seconds)."""
+    a = elements.sma_km[:, None]                           # (n, 1)
+    n_mot = jnp.sqrt(MU_EARTH / a ** 3)                    # rad/s
+    u = elements.anom0_rad[:, None] + n_mot * times_s[None, :]
+    cu, su = jnp.cos(u), jnp.sin(u)
+    ci = jnp.cos(elements.inc_rad)[:, None]
+    si = jnp.sin(elements.inc_rad)[:, None]
+    cO = jnp.cos(elements.raan_rad)[:, None]
+    sO = jnp.sin(elements.raan_rad)[:, None]
+    # orbital-plane position rotated by inclination then RAAN
+    x = a * (cO * cu - sO * su * ci)
+    y = a * (sO * cu + cO * su * ci)
+    z = a * (su * si)
+    return jnp.stack([x, y, z], axis=-1)
+
+
+def ground_station_eci(lat_lon_deg, times_s: jax.Array,
+                       gmst0_rad: float = 0.0) -> jax.Array:
+    """ECI positions (n_gs, n_times, 3) of ground stations rotating with Earth."""
+    ll = jnp.asarray(lat_lon_deg, jnp.float32)
+    lat = jnp.deg2rad(ll[:, 0])[:, None]
+    lon = jnp.deg2rad(ll[:, 1])[:, None]
+    theta = gmst0_rad + lon + EARTH_ROT_RATE * times_s[None, :]
+    clat = jnp.cos(lat)
+    x = EARTH_RADIUS_KM * clat * jnp.cos(theta)
+    y = EARTH_RADIUS_KM * clat * jnp.sin(theta)
+    z = EARTH_RADIUS_KM * jnp.sin(lat) * jnp.ones_like(theta)
+    return jnp.stack([x, y, z], axis=-1)

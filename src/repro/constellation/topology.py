@@ -1,0 +1,156 @@
+"""sat-QFL topology: primary/secondary roles, windows, routing, participation.
+
+Implements the paper's §I-B formulation on top of the propagated traces:
+
+  S_p(t) = ground-visible satellites (primaries / "main satellites")
+  S_s(t) = the rest, reachable only over ISLs
+  P_i(t) = 1 iff a path to some ground station exists within
+           (H_max hops, L_max latency)
+  C(t)   = participating set
+
+plus the scheduling artifacts the FL core consumes: per-round participation
+masks, secondary→primary assignment, and access windows (t_start, t_end).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.constellation.orbits import (
+    GROUND_STATIONS, ground_station_eci, propagate, walker_constellation,
+)
+from repro.constellation.visibility import sat_ground_access, sat_sat_access
+
+SPEED_OF_LIGHT_KM_S = 299792.458
+
+
+@dataclass
+class ConstellationTrace:
+    """Propagated scenario: everything the FL scheduler needs, as numpy."""
+    times_s: np.ndarray                 # (T,)
+    sat_pos: np.ndarray                 # (n_sat, T, 3)
+    sg_access: np.ndarray               # (n_sat, n_gs, T) bool
+    ss_access: np.ndarray               # (n_sat, n_sat, T) bool
+    gs_names: list
+    n_sats: int
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.times_s)
+
+
+def build_trace(n_sats: int = 50, n_planes: int = 10,
+                duration_s: float = 6 * 3600.0, step_s: float = 30.0,
+                min_elev_deg: float = 10.0, seed: int = 0,
+                gs_names: list | None = None) -> ConstellationTrace:
+    """The paper's scenario: 50 (or 100) Starlink-like satellites, 10 ground
+    stations, 6 h window, 30 s sampling."""
+    names = gs_names or list(GROUND_STATIONS.keys())
+    lat_lon = [GROUND_STATIONS[n] for n in names]
+    times = jnp.arange(0.0, duration_s + step_s, step_s, dtype=jnp.float32)
+    elements = walker_constellation(n_sats, n_planes, jitter_seed=seed)
+    sat_pos = propagate(elements, times)
+    gs_pos = ground_station_eci(lat_lon, times)
+    sg = sat_ground_access(sat_pos, gs_pos, min_elev_deg)
+    ss = sat_sat_access(sat_pos)
+    return ConstellationTrace(
+        times_s=np.asarray(times), sat_pos=np.asarray(sat_pos),
+        sg_access=np.asarray(sg), ss_access=np.asarray(ss),
+        gs_names=names, n_sats=n_sats)
+
+
+def partition_roles(trace: ConstellationTrace, t_idx: int):
+    """S_p(t), S_s(t): primaries see any ground station at step t."""
+    vis = trace.sg_access[:, :, t_idx].any(axis=1)
+    primaries = np.where(vis)[0]
+    secondaries = np.where(~vis)[0]
+    return primaries, secondaries
+
+
+def assign_secondaries(trace: ConstellationTrace, t_idx: int):
+    """Map each secondary to its nearest ISL-visible primary (the paper's
+    {SecSat} per MainSat grouping). Unreachable secondaries map to -1."""
+    primaries, secondaries = partition_roles(trace, t_idx)
+    pos = trace.sat_pos[:, t_idx]
+    isl = trace.ss_access[:, :, t_idx]
+    assign = {int(p): [] for p in primaries}
+    unreachable = []
+    for s in secondaries:
+        cand = [p for p in primaries if isl[s, p]]
+        if not cand:
+            unreachable.append(int(s))
+            continue
+        dists = [np.linalg.norm(pos[s] - pos[p]) for p in cand]
+        assign[int(cand[int(np.argmin(dists))])].append(int(s))
+    return assign, unreachable
+
+
+def isl_routes(trace: ConstellationTrace, t_idx: int, h_max: int = 4,
+               l_max_s: float = 0.25):
+    """P_i(t) via BFS over the ISL graph with hop + latency constraints.
+
+    Returns (participation (n_sat,) bool, hops (n_sat,), latency_s (n_sat,)).
+    Primaries have 0 hops; latency accumulates ISL propagation delays.
+    """
+    n = trace.n_sats
+    pos = trace.sat_pos[:, t_idx]
+    isl = trace.ss_access[:, :, t_idx]
+    primaries, _ = partition_roles(trace, t_idx)
+
+    hops = np.full(n, np.inf)
+    lat = np.full(n, np.inf)
+    hops[primaries] = 0
+    lat[primaries] = 0.0
+    frontier = list(primaries)
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in np.where(isl[u])[0]:
+                d = np.linalg.norm(pos[u] - pos[v]) / SPEED_OF_LIGHT_KM_S
+                if hops[u] + 1 < hops[v] and hops[u] + 1 <= h_max \
+                        and lat[u] + d <= l_max_s:
+                    hops[v] = hops[u] + 1
+                    lat[v] = lat[u] + d
+                    nxt.append(v)
+        frontier = nxt
+    part = np.isfinite(hops)
+    return part, hops, lat
+
+
+def access_windows(trace: ConstellationTrace, sat: int, other: int | None = None,
+                   ground: int | None = None):
+    """(t_start, t_end) intervals (seconds) for sat↔sat or sat↔ground access
+    — the accessTimes input of Algorithm 1."""
+    if other is not None:
+        series = trace.ss_access[sat, other]
+    elif ground is not None:
+        series = trace.sg_access[sat, ground]
+    else:
+        series = trace.sg_access[sat].any(axis=0)
+    t = trace.times_s
+    edges = np.diff(series.astype(np.int8), prepend=0, append=0)
+    starts = np.where(edges == 1)[0]
+    ends = np.where(edges == -1)[0] - 1
+    return [(float(t[s]), float(t[min(e, len(t) - 1)]))
+            for s, e in zip(starts, ends)]
+
+
+def participation_series(trace: ConstellationTrace, n_rounds: int,
+                         h_max: int = 4, l_max_s: float = 0.25,
+                         round_stride: int | None = None) -> np.ndarray:
+    """(n_rounds, n_sat) bool: P_i at the trace step of each FL round.
+
+    Rounds are spread across the trace (stride = T / n_rounds by default),
+    matching "schedule training aligned with visibility windows".
+    """
+    T = trace.n_steps
+    stride = round_stride or max(T // n_rounds, 1)
+    out = np.zeros((n_rounds, trace.n_sats), bool)
+    for r in range(n_rounds):
+        t_idx = min(r * stride, T - 1)
+        part, _, _ = isl_routes(trace, t_idx, h_max, l_max_s)
+        out[r] = part
+    return out

@@ -1,0 +1,53 @@
+"""Line-of-sight access computation (paper §I-B: the H(t) graph edges).
+
+All functions are jit-friendly jnp over the propagated position tensors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.constellation.orbits import EARTH_RADIUS_KM
+
+
+def elevation_angle(sat_pos: jax.Array, gs_pos: jax.Array) -> jax.Array:
+    """Elevation of satellite above a ground station's local horizon.
+
+    sat_pos (n_sat, T, 3); gs_pos (n_gs, T, 3) -> (n_sat, n_gs, T) radians.
+    """
+    rel = sat_pos[:, None] - gs_pos[None]                   # (s, g, T, 3)
+    up = gs_pos / jnp.linalg.norm(gs_pos, axis=-1, keepdims=True)
+    cos_zen = jnp.sum(rel * up[None], axis=-1) / jnp.maximum(
+        jnp.linalg.norm(rel, axis=-1), 1e-6)
+    return jnp.arcsin(jnp.clip(cos_zen, -1.0, 1.0))
+
+
+def sat_ground_access(sat_pos: jax.Array, gs_pos: jax.Array,
+                      min_elev_deg: float = 10.0) -> jax.Array:
+    """Boolean access (n_sat, n_gs, T)."""
+    elev = elevation_angle(sat_pos, gs_pos)
+    return elev >= jnp.deg2rad(min_elev_deg)
+
+
+def sat_sat_access(sat_pos: jax.Array, max_range_km: float = 5016.0,
+                   grazing_alt_km: float = 80.0) -> jax.Array:
+    """ISL feasibility (n_sat, n_sat, T): within range and the line between
+    the two satellites clears the atmosphere (grazing altitude).
+
+    max_range default = Starlink ISL spec; grazing 80 km (atmospheric
+    attenuation limit for optical ISLs).
+    """
+    d = sat_pos[:, None] - sat_pos[None]                    # (i, j, T, 3)
+    dist = jnp.linalg.norm(d, axis=-1)
+    in_range = (dist > 1e-3) & (dist <= max_range_km)
+
+    # closest approach of segment i->j to Earth's center
+    a = sat_pos[:, None]                                    # (i, 1, T, 3)
+    ab = -d                                                 # j - i
+    denom = jnp.maximum(jnp.sum(ab * ab, axis=-1), 1e-9)
+    t = jnp.clip(-jnp.sum(a * ab, axis=-1) / denom, 0.0, 1.0)
+    closest = a + t[..., None] * ab
+    clear = jnp.linalg.norm(closest, axis=-1) >= (EARTH_RADIUS_KM
+                                                  + grazing_alt_km)
+    eye = jnp.eye(sat_pos.shape[0], dtype=bool)[:, :, None]
+    return in_range & clear & ~eye

@@ -1,0 +1,27 @@
+"""sat-QFL core: the paper's contribution as a composable JAX module.
+
+Two execution scales, same semantics:
+
+  * ``round``  — host-orchestrated hierarchical rounds at the paper's scale
+    (50 satellites × VQC on Statlog/EuroSAT): Algorithm 1 with all three
+    schedules (sequential / simultaneous / asynchronous), Algorithm 2
+    security (QKD-OTP / QKD-Fernet / teleportation), constellation-driven
+    roles and windows, and the communication-time model.
+
+  * ``dist``   — the same round as ONE jit-compiled program on the
+    production mesh ("stacked satellites": the satellite index is a sharded
+    leading axis; sequential mode becomes a collective-permute ring,
+    simultaneous/async become (masked) pmeans, and the security layer runs
+    in-graph). This is what the multi-pod dry-run lowers.
+"""
+from repro.core.flconfig import SatQFLConfig
+from repro.core.comm import CommModel, CommLog
+from repro.core.round import SatQFLTrainer, evaluate
+from repro.core.dist import (
+    FLState, make_fl_round, fl_input_specs, make_secure_exchange,
+)
+
+__all__ = [
+    "SatQFLConfig", "CommModel", "CommLog", "SatQFLTrainer", "evaluate",
+    "FLState", "make_fl_round", "fl_input_specs", "make_secure_exchange",
+]

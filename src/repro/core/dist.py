@@ -1,0 +1,289 @@
+"""Mesh-scale sat-QFL: one jit-compiled FL round on the production mesh.
+
+**Stacked-satellite formulation.** The satellite index is a leading axis of
+every parameter/optimizer/data tensor, sharded over the batch-ish mesh axes
+(("pod", "data")). One mesh slice == one satellite's compute board; the
+model dims shard over "model" (tensor parallelism inside a satellite).
+The paper's schedules then become collectives:
+
+  simultaneous — local steps, then mean over the satellite axis
+                 (GSPMD lowers to a two-tier all-reduce: intra-pod =
+                 secondary→primary ISL traffic, inter-pod = feeder links)
+  asynchronous — the same mean but masked by the visibility-window
+                 participation vector; non-participants' updates are kept
+                 in a staleness buffer and folded in within Δ_max rounds
+  sequential   — ring: train, pass parameters to the next satellite
+                 (jnp.roll over the sharded axis -> collective_permute).
+                 N parallel chains run pipelined — a beyond-paper
+                 throughput fix for the paper's serial chain (DESIGN §5).
+
+Security (Algorithm 2) runs in-graph:
+
+  otp     — paper-faithful: OTP-XOR each satellite's update with its
+            edge pad, move ciphertext, decrypt at the aggregator. XOR∘XOR
+            would cancel algebraically, so optimization_barrier pins the
+            ciphertext movement (the honest data path).
+  secagg  — beyond-paper: pairwise additive masks Σ m_i = 0 (ring PRF
+            construction), so the masked updates psum to the true sum
+            with NO gather and no per-edge decrypt — O(d) instead of
+            O(N·d) aggregation traffic. See EXPERIMENTS §Perf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flconfig import SatQFLConfig
+from repro.nn.optim import Optimizer
+from repro.sharding.context import DistCtx
+
+
+class FLState(NamedTuple):
+    params: Any          # stacked (n_sat, ...) pytree
+    opt_slots: Any       # stacked optimizer slots
+    stale: Any           # async: buffered undelivered updates (n_sat, ...)
+    stale_age: jax.Array # (n_sat,) int32 rounds since buffered (-1 = none)
+    round_idx: jax.Array # scalar int32
+
+
+# ---------------------------------------------------------------------------
+# security primitives over stacked pytrees
+# ---------------------------------------------------------------------------
+
+_UDTYPE = {
+    jnp.dtype(jnp.float32): jnp.uint32,
+    jnp.dtype(jnp.bfloat16): jnp.uint16,
+    jnp.dtype(jnp.float16): jnp.uint16,
+}
+
+
+def _xor_with_pad(leaf, keys):
+    """XOR each satellite's slice with its own threefry pad. leaf (N, ...)."""
+    ud = _UDTYPE[jnp.dtype(leaf.dtype)]
+    u = jax.lax.bitcast_convert_type(leaf, ud)
+
+    def one(k, row):
+        return row ^ jax.random.bits(k, row.shape, ud)
+
+    return jax.lax.bitcast_convert_type(jax.vmap(one)(keys, u), leaf.dtype)
+
+
+def otp_stacked(tree, seeds_u32, leaf_salt: int = 0):
+    """OTP over a stacked pytree; seeds (n_sat,) uint32. Involution."""
+    base = jax.vmap(jax.random.key)(seeds_u32)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        keys = jax.vmap(lambda k: jax.random.fold_in(k, i + leaf_salt))(base)
+        out.append(_xor_with_pad(leaf, keys))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def secagg_mask(tree, seeds_u32, sign_split: int):
+    """Pairwise-additive masking: θ_i + PRF(i) − PRF(i+1 mod N).
+
+    The masks telescope to zero over the satellite axis, so the (weighted
+    by 1/N) sum of masked updates equals the true mean while each
+    individual update is blinded. fp32 mask magnitude is scaled small to
+    bound fp cancellation error.
+    """
+    n = seeds_u32.shape[0]
+    base = jax.vmap(jax.random.key)(seeds_u32)
+    nxt = jnp.roll(seeds_u32, -1)
+    base_n = jax.vmap(jax.random.key)(nxt)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        def mk(keyv):
+            keys = jax.vmap(lambda k: jax.random.fold_in(k, i + sign_split))(keyv)
+            def one(k, row):
+                return jax.random.normal(k, row.shape, jnp.float32)
+            return jax.vmap(one)(keys, leaf)
+        m = mk(base) - mk(base_n)
+        out.append((leaf.astype(jnp.float32) + m).astype(leaf.dtype)
+                   if leaf.dtype != jnp.float32 else leaf + m)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_secure_exchange(security: str):
+    """Returns f(tree, seeds, round) -> tree_as_received_by_aggregator."""
+    if security in ("none", "otp_gather"):   # otp_gather handled in round_fn
+        return lambda tree, seeds, r: tree
+
+    if security == "otp":
+        def exchange(tree, seeds, r):
+            s = seeds ^ (r.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
+            ct = otp_stacked(tree, s)
+            # pin the ciphertext as the moved representation
+            ct = jax.lax.optimization_barrier(ct)
+            return otp_stacked(ct, s)
+        return exchange
+
+    if security == "secagg":
+        def exchange(tree, seeds, r):
+            s = seeds ^ (r.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B))
+            return secagg_mask(tree, s, sign_split=1000)
+        return exchange
+
+    raise ValueError(security)
+
+
+# ---------------------------------------------------------------------------
+# the round
+# ---------------------------------------------------------------------------
+
+def _wmean_sats(tree, w):
+    """Weighted mean over the satellite axis, broadcast back. w (N,) sums>0."""
+    wn = w / jnp.maximum(jnp.sum(w), 1e-9)
+
+    def red(x):
+        m = jnp.tensordot(wn.astype(jnp.float32),
+                          x.astype(jnp.float32), axes=(0, 0))
+        return jnp.broadcast_to(m[None], x.shape).astype(x.dtype)
+
+    return jax.tree_util.tree_map(red, tree)
+
+
+def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
+                  n_sats: int, security: str = "none", seq_hops: int = 4,
+                  ctx: DistCtx | None = None):
+    """Build the jit-able round function.
+
+    round_fn(state, batches, part_mask, seeds) -> (state, metrics)
+
+      batches:   pytree, leaves (n_sat, local_steps, batch, ...)
+      part_mask: (n_sat,) float — visibility-window participation (async)
+      seeds:     (n_sat,) uint32 — per-edge QKD-derived pad seeds
+    """
+    if security == "otp_gather" and fl.mode not in ("sim", "qfl"):
+        raise ValueError("otp_gather models the central-server topology — "
+                         "sim/qfl schedules only")
+    if security == "secagg" and fl.mode != "sim":
+        # the ring-PRF masks telescope only over the FULL satellite set:
+        # sequential is point-to-point, and async's partial participation
+        # would need dropout-tolerant secret sharing (Bonawitz et al.) —
+        # out of scope. Paper-faithful 'otp' covers those modes.
+        raise ValueError("secagg requires full participation — only the "
+                         "'sim' schedule; use 'otp' for seq/async")
+    exchange = make_secure_exchange(security)
+
+    def local_train(params, slots, batches, step0):
+        """E local SGD steps on one satellite (vmapped over the sat axis)."""
+        def body(carry, batch):
+            p, o, s = carry
+            loss, g = jax.value_and_grad(
+                lambda pp: api.loss(model_cfg, pp, batch))(p)
+            p, o = optimizer.update(g, o, p, s)
+            return (p, o, s + 1), loss
+
+        (p, o, _), losses = jax.lax.scan(body, (params, slots, step0), batches)
+        return p, o, jnp.mean(losses)
+
+    vtrain = jax.vmap(local_train, in_axes=(0, 0, 0, None))
+
+    def round_fn(state: FLState, batches, part_mask, seeds):
+        r = state.round_idx
+        step0 = r * fl.local_steps
+
+        if fl.mode == "seq":
+            # pipelined sequential: train -> secure hand-off to next satellite
+            p, o = state.params, state.opt_slots
+            losses = jnp.zeros(())
+            for hop in range(seq_hops):
+                p, o, l = vtrain(p, o, jax.tree_util.tree_map(
+                    lambda x: x, batches), step0 + hop)
+                p = exchange(p, seeds ^ jnp.uint32(hop + 1), r)
+                p = jax.tree_util.tree_map(lambda x: jnp.roll(x, 1, axis=0), p)
+                losses = losses + jnp.mean(l)
+            new_params = _wmean_sats(p, jnp.ones((n_sats,)))
+            mean_loss = losses / seq_hops
+            new_stale, new_age = state.stale, state.stale_age
+        else:
+            p, o, l = vtrain(state.params, state.opt_slots, batches, step0)
+            mean_loss = jnp.mean(l)
+            if fl.mode == "sim" or fl.mode == "qfl":
+                w = jnp.ones((n_sats,))
+                if security == "otp_gather":
+                    # PAPER-FAITHFUL topology: the aggregator receives every
+                    # satellite's ciphertext (an all-gather of the stacked
+                    # axis: O(N·d) bytes/device) and decrypts centrally.
+                    # Compare with 'secagg' (masked psum, O(d)) — §Perf D.
+                    s = seeds ^ (r.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
+                    ct = otp_stacked(p, s)
+                    from jax.sharding import PartitionSpec as P
+                    ct = jax.lax.with_sharding_constraint(
+                        ct, jax.tree_util.tree_map(
+                            lambda leaf: P(*([None] * leaf.ndim)), ct))
+                    moved = otp_stacked(ct, s)        # decrypt at aggregator
+                else:
+                    moved = exchange(p, seeds, r)
+                new_params = _wmean_sats(moved, w)
+                new_stale, new_age = state.stale, state.stale_age
+            elif fl.mode == "async":
+                # deliver participants now; buffer the rest (bounded staleness)
+                moved = exchange(p, seeds, r)
+                w_now = part_mask
+                # stale buffer usable if within Δ_max
+                stale_ok = ((state.stale_age >= 0)
+                            & (state.stale_age <= fl.max_staleness))
+                w_stale = stale_ok.astype(jnp.float32) * (1.0 - part_mask)
+                combined = jax.tree_util.tree_map(
+                    lambda now, st: (now.astype(jnp.float32)
+                                     * _bshape(w_now, now)
+                                     + st.astype(jnp.float32)
+                                     * _bshape(w_stale, st)).astype(now.dtype),
+                    moved, state.stale)
+                w_tot = w_now + w_stale
+                new_params = _wmean_sats(combined, w_tot)
+                # rebuffer: non-participants' fresh updates wait for a window
+                new_stale = jax.tree_util.tree_map(
+                    lambda fresh, st: jnp.where(
+                        _bshape(part_mask, fresh) > 0, fresh.astype(jnp.float32),
+                        st.astype(jnp.float32)).astype(fresh.dtype),
+                    moved, state.stale)
+                new_age = jnp.where(part_mask > 0, 0, state.stale_age + 1)
+            else:
+                raise ValueError(fl.mode)
+
+        return FLState(new_params, o if fl.mode != "seq" else o,
+                       new_stale, new_age, r + 1), {"loss": mean_loss}
+
+    return round_fn
+
+
+def _bshape(w, like):
+    """Broadcast (N,) weights against (N, ...) leaf."""
+    return w.reshape((-1,) + (1,) * (like.ndim - 1)).astype(jnp.float32)
+
+
+def fl_init_state(model_cfg, api, optimizer, n_sats: int, key) -> FLState:
+    keys = jax.random.split(key, n_sats)
+    params = jax.vmap(lambda k: api.init(model_cfg, k))(keys)
+    # every satellite starts from the same global model (round 0 broadcast)
+    params = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[:1], x.shape), params)
+    stale = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return FLState(params=params,
+                   opt_slots=jax.vmap(optimizer.init)(params),
+                   stale=stale,
+                   stale_age=jnp.full((n_sats,), -1, jnp.int32),
+                   round_idx=jnp.zeros((), jnp.int32))
+
+
+def fl_input_specs(model_cfg, api, fl: SatQFLConfig, n_sats: int,
+                   feature_shape: tuple, n_classes: int):
+    """ShapeDtypeStructs for the FL dry-run (classifier workloads)."""
+    bs = (n_sats, fl.local_steps, fl.batch_size)
+    return {
+        "batches": {
+            "features": jax.ShapeDtypeStruct(bs + feature_shape, jnp.float32),
+            "labels": jax.ShapeDtypeStruct(bs, jnp.int32),
+        },
+        "part_mask": jax.ShapeDtypeStruct((n_sats,), jnp.float32),
+        "seeds": jax.ShapeDtypeStruct((n_sats,), jnp.uint32),
+    }

@@ -1,0 +1,38 @@
+"""sat-QFL run configuration."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SatQFLConfig:
+    # --- schedule (paper Algorithm 1) --------------------------------------
+    mode: str = "sim"            # qfl | sim | seq | async
+    n_rounds: int = 20
+    local_steps: int = 10        # SGD steps per satellite per round
+    batch_size: int = 32
+    lr: float = 0.05
+    optimizer: str = "sgd"       # sgd | momentum | adamw
+    lr_schedule: str = "inv_sqrt"  # constant | inv_sqrt (Proposition 1)
+
+    # --- topology constraints (paper §I-B) ---------------------------------
+    h_max: int = 1               # ISL hops for secondary->main delivery
+    l_max_s: float = 0.25
+    max_staleness: int = 3       # Δ_max rounds (Assumption 1)
+
+    # --- security (paper Algorithm 2) --------------------------------------
+    security: str = "none"       # none | qkd | qkd_fernet | teleport
+    qkd_bits: int = 512
+    teleport_pairs: int = 16     # (θ,φ) pairs teleported per exchange
+    verify_mac: bool = True
+
+    # --- aggregation -------------------------------------------------------
+    weight_by_samples: bool = True   # FedAvg weighting w_i
+    main_trains: bool = True         # "Further train with main satellites"
+
+    seed: int = 0
+    eval_every: int = 1
+
+    def replace(self, **kw) -> "SatQFLConfig":
+        return dataclasses.replace(self, **kw)

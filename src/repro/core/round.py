@@ -1,0 +1,353 @@
+"""Host-orchestrated sat-QFL rounds — paper Algorithm 1 + Algorithm 2.
+
+This is the *paper-scale* engine: tens of satellites, each with a private
+dataset and a local model (the VQC for the paper's experiments; any
+ModelApi works). Roles (main/secondary), assignments, and access windows
+come from the constellation trace; exchanges are optionally secured with
+QKD-keyed OTP (+MAC), Fernet-lite control tokens, or teleportation of
+(θ, φ) pairs; the communication-time model accounts every transfer.
+
+The jit boundary is the per-satellite local training function (shared
+shapes => compiled once); orchestration is Python, as in the paper's
+implementation — the mesh-scale in-graph version lives in ``repro.core.dist``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.constellation.topology import (
+    ConstellationTrace, access_windows, assign_secondaries, partition_roles,
+)
+from repro.core.comm import CommLog, CommModel
+from repro.core.flconfig import SatQFLConfig
+from repro.nn.optim import get_optimizer, inv_sqrt_schedule, constant_schedule
+from repro.nn.pytree import tree_bytes, tree_weighted_sum
+from repro.security.keys import KeyManager
+from repro.security.mac import poly_mac_u32, mac_verify
+from repro.security.otp import decrypt_tree, encrypt_tree, tree_to_u32
+from repro.quantum.teleport import teleport_params
+
+
+def default_sample_batch(data: dict, key, batch_size: int) -> dict:
+    n = next(iter(data.values())).shape[0]
+    idx = jax.random.randint(key, (batch_size,), 0, n)
+    return {k: v[idx] for k, v in data.items()}
+
+
+def evaluate(api, model_cfg, params, batch) -> tuple[float, float]:
+    """(loss, accuracy). Accuracy = argmax match over the label field."""
+    logits, _ = api.forward(model_cfg, params, batch)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    acc = jnp.mean((jnp.argmax(lf, -1) == labels).astype(jnp.float32))
+    return float(loss), float(acc)
+
+
+@dataclass
+class RoundMetrics:
+    round: int
+    server_val_loss: float = float("nan")
+    server_val_acc: float = float("nan")
+    server_test_acc: float = float("nan")
+    dev_train_acc: float = float("nan")
+    dev_test_acc: float = float("nan")
+    dev_val_loss: float = float("nan")
+    comm_s: float = 0.0
+    security_s: float = 0.0
+    participants: int = 0
+    teleport_fidelity: float = float("nan")
+
+
+class SatQFLTrainer:
+    """Hierarchical QFL over a constellation trace (paper Algorithm 1)."""
+
+    def __init__(self, model_cfg, api, fl: SatQFLConfig,
+                 trace: ConstellationTrace, sat_data: list,
+                 server_data: dict, comm: CommModel | None = None,
+                 sample_batch=default_sample_batch,
+                 eavesdrop_edges: frozenset = frozenset()):
+        self.model_cfg = model_cfg
+        self.api = api
+        self.fl = fl
+        self.trace = trace
+        self.sat_data = sat_data
+        self.server_data = server_data
+        self.comm = comm or CommModel()
+        self.sample_batch = sample_batch
+        self.n_sats = trace.n_sats
+        assert len(sat_data) == self.n_sats
+
+        key = jax.random.PRNGKey(fl.seed)
+        self.key, init_key = jax.random.split(key)
+        self.global_params = api.init(model_cfg, init_key)
+
+        sched = (inv_sqrt_schedule(fl.lr, warmup=0)
+                 if fl.lr_schedule == "inv_sqrt" else constant_schedule(fl.lr))
+        self.opt = get_optimizer(fl.optimizer, sched)
+        self.opt_states = [self.opt.init(self.global_params)
+                           for _ in range(self.n_sats)]
+        self.global_step = 0
+
+        self.keymgr = KeyManager(jax.random.PRNGKey(fl.seed + 7),
+                                 n_qkd_bits=fl.qkd_bits,
+                                 eavesdrop_edges=eavesdrop_edges)
+        self._qkd_established: set = set()
+        self.pending: dict[int, list] = {}      # async: main -> [(params, w, born)]
+        self.log = CommLog()
+        self.history: list[RoundMetrics] = []
+
+        self._jit_local = jax.jit(self._local_train_impl)
+        self._round_stride = max(trace.n_steps // max(fl.n_rounds, 1), 1)
+
+    # ------------------------------------------------------------------
+    # local training (jitted once; shapes shared across satellites)
+    # ------------------------------------------------------------------
+    def _local_train_impl(self, params, opt_state, data, key, step0):
+        fl, api, cfg = self.fl, self.api, self.model_cfg
+
+        def body(carry, k):
+            p, o, s = carry
+            batch = self.sample_batch(data, k, fl.batch_size)
+            loss, g = jax.value_and_grad(
+                lambda pp: api.loss(cfg, pp, batch))(p)
+            p, o = self.opt.update(g, o, p, s)
+            return (p, o, s + 1), loss
+
+        keys = jax.random.split(key, fl.local_steps)
+        (p, o, s), losses = jax.lax.scan(body, (params, opt_state, step0), keys)
+        return p, o, jnp.mean(losses)
+
+    def _train_sat(self, sat: int, params):
+        self.key, k = jax.random.split(self.key)
+        p, o, loss = self._jit_local(params, self.opt_states[sat],
+                                     self.sat_data[sat], k,
+                                     jnp.asarray(self.global_step, jnp.int32))
+        self.opt_states[sat] = o
+        self.global_step += self.fl.local_steps
+        return p, float(loss)
+
+    # ------------------------------------------------------------------
+    # secure exchange (Algorithm 2) — returns params as seen by receiver
+    # ------------------------------------------------------------------
+    def _exchange(self, params, edge: tuple, round_idx: int, link: str,
+                  concurrent: int = 1):
+        fl = self.fl
+        nbytes = tree_bytes(params)
+        t = (self.comm.isl_transfer(nbytes, concurrent) if link == "isl"
+             else self.comm.feeder_transfer(nbytes, concurrent))
+        self.log.bytes_moved += nbytes
+        self.log.n_transfers += 1
+        if fl.security == "none":
+            return params, t
+
+        ek = self.keymgr.get(edge)
+        if ek.edge not in self._qkd_established:
+            self._qkd_established.add(ek.edge)
+            tq = self.comm.qkd_time(fl.qkd_bits)
+            self.log.add_security(tq)
+            t += tq
+        if ek.compromised:
+            # eavesdropping detected at key establishment: drop this link
+            raise ConnectionAbortedError(f"QBER abort on edge {ek.edge}")
+
+        if fl.security in ("qkd", "qkd_fernet"):
+            seed = ek.round_seed(round_idx)
+            ct = encrypt_tree(params, seed)
+            if fl.verify_mac:
+                r, s = ek.mac_keys(round_idx)
+                stream = tree_to_u32(ct)
+                tag = poly_mac_u32(stream, r, s)
+                assert bool(mac_verify(stream, tag, r, s)), "MAC mismatch"
+            tc = 2 * self.comm.crypto_time(nbytes)
+            if fl.security == "qkd_fernet":
+                # control-plane metadata rides in a Fernet token (paper's
+                # QKD+Fernet mode); key material from the QKD seed
+                from repro.security.fernet_lite import (fernet_decrypt,
+                                                        fernet_encrypt)
+                fkey = int(seed).to_bytes(4, "big") * 8
+                meta = f"edge={ek.edge} round={round_idx} n={nbytes}".encode()
+                tok = fernet_encrypt(fkey, meta)
+                assert fernet_decrypt(fkey, tok) == meta
+                tc += 2 * self.comm.crypto_time(len(tok))
+            self.log.add_security(tc)
+            t += tc
+            return decrypt_tree(ct, seed), t
+
+        if fl.security == "teleport":
+            # feasibility primitive: teleport a sample of (θ, φ) angle pairs
+            flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                                    for x in jax.tree_util.tree_leaves(params)])
+            n = min(fl.teleport_pairs, flat.shape[0] // 2)
+            thetas = jnp.clip(jnp.abs(flat[:n]) % jnp.pi, 0.0, jnp.pi)
+            phis = ((flat[n:2 * n] + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+            self.key, k = jax.random.split(self.key)
+            _, _, fid = teleport_params(k, thetas, phis)
+            self._last_fidelity = float(fid)
+            tt = self.comm.teleport_time(n)
+            self.log.add_security(tt)
+            t += tt
+            return params, t
+        raise ValueError(fl.security)
+
+    # ------------------------------------------------------------------
+    # window wait for async deliveries (trace-driven)
+    # ------------------------------------------------------------------
+    def _window_wait(self, sat: int, main: int, t_idx: int) -> float | None:
+        """Seconds until (sat, main) ISL access opens; 0 if open; None if
+        never within the trace."""
+        series = self.trace.ss_access[sat, main, t_idx:]
+        hits = np.where(series)[0]
+        if len(hits) == 0:
+            return None
+        return float(hits[0] * (self.trace.times_s[1] - self.trace.times_s[0]))
+
+    # ------------------------------------------------------------------
+    # one round of Algorithm 1
+    # ------------------------------------------------------------------
+    def run_round(self, r: int) -> RoundMetrics:
+        fl = self.fl
+        t_idx = min(r * self._round_stride, self.trace.n_steps - 1)
+        m = RoundMetrics(round=r)
+        round_t0 = self.log.total_s
+        sec_t0 = self.log.security_s
+        if fl.weight_by_samples:
+            def weights_of(s):
+                return float(len(next(iter(self.sat_data[s].values()))))
+        else:
+            def weights_of(s):
+                return 1.0
+
+        if fl.mode == "qfl":
+            # flat FedAvg baseline: every satellite talks to the server
+            # over its own feeder beam — transfers are PARALLEL (wall = max)
+            updates, ws, walls = [], [], [0.0]
+            for s in range(self.n_sats):
+                p, _ = self._train_sat(s, self.global_params)
+                p, t = self._exchange(p, ("gs", s), r, "feeder")
+                walls.append(t)
+                updates.append(p)
+                ws.append(weights_of(s))
+            self.log.add_transfer(2 * max(walls), 0)   # up + broadcast down
+            wsum = sum(ws)
+            self.global_params = tree_weighted_sum(
+                updates, [w / wsum for w in ws])
+            m.participants = self.n_sats
+        else:
+            assign, unreachable = assign_secondaries(self.trace, t_idx)
+            main_models, main_ws = [], []
+            group_walls, feeder_walls = [0.0], [0.0]
+            participants = 0
+            for main, secs in assign.items():
+                if fl.mode == "seq":
+                    # the chain is SERIAL: wall = sum of hop transfers
+                    theta = self.global_params
+                    chain_wall = 0.0
+                    for s in secs:
+                        theta, _ = self._train_sat(s, theta)
+                        theta, t = self._exchange(theta, (s, main), r, "isl")
+                        chain_wall += t
+                        participants += 1
+                    group_walls.append(chain_wall)
+                    merged = theta
+                elif fl.mode == "sim":
+                    # parallel uploads CONTEND for the main's ISL aperture
+                    # (bandwidth / n_concurrent): wall = max over secs
+                    collected, ws, up_walls = [], [], [0.0]
+                    for s in secs:
+                        p, _ = self._train_sat(s, self.global_params)
+                        p, t = self._exchange(p, (s, main), r, "isl",
+                                              concurrent=max(len(secs), 1))
+                        up_walls.append(t)
+                        collected.append(p)
+                        ws.append(weights_of(s))
+                        participants += 1
+                    group_walls.append(max(up_walls))
+                    if collected:
+                        wsum = sum(ws)
+                        merged = tree_weighted_sum(
+                            collected, [w / wsum for w in ws])
+                    else:
+                        merged = self.global_params
+                elif fl.mode == "async":
+                    q = self.pending.setdefault(main, [])
+                    async_walls = [0.0]
+                    for s in secs:
+                        p, _ = self._train_sat(s, self.global_params)
+                        wait = self._window_wait(s, main, t_idx)
+                        if wait is None:
+                            continue            # no window: update dropped
+                        w_s = min(wait, self.comm.window_wait_s) if wait > 0 else 0.0
+                        p, t = self._exchange(p, (s, main), r, "isl")
+                        async_walls.append(w_s + t)
+                        q.append((p, weights_of(s), r))
+                    group_walls.append(max(async_walls))
+                    # aggregate deliveries within Δ_max (bounded staleness)
+                    fresh = [(p, w, born) for (p, w, born) in q
+                             if r - born <= fl.max_staleness]
+                    self.pending[main] = []
+                    if fresh:
+                        wsum = sum(w for _, w, _ in fresh)
+                        merged = tree_weighted_sum(
+                            [p for p, _, _ in fresh],
+                            [w / wsum for _, w, _ in fresh])
+                        participants += len(fresh)
+                    else:
+                        merged = self.global_params
+                else:
+                    raise ValueError(fl.mode)
+
+                if fl.main_trains:
+                    merged, _ = self._train_sat(main, merged)
+                    participants += 1
+                merged, t = self._exchange(merged, (main, "gs"), r, "feeder")
+                feeder_walls.append(t)
+                main_models.append(merged)
+                main_ws.append(weights_of(main) + sum(weights_of(s)
+                                                      for s in secs))
+            if main_models:
+                wsum = sum(main_ws)
+                self.global_params = tree_weighted_sum(
+                    main_models, [w / wsum for w in main_ws])
+            # round wall: slowest group (groups run in parallel), then the
+            # slowest feeder uplink, plus the global broadcast back down
+            self.log.add_transfer(max(group_walls) + 2 * max(feeder_walls), 0)
+            m.participants = participants
+
+        m.comm_s = self.log.total_s - round_t0
+        m.security_s = self.log.security_s - sec_t0
+        self.log.close_round()
+        if hasattr(self, "_last_fidelity"):
+            m.teleport_fidelity = self._last_fidelity
+
+        if r % fl.eval_every == 0:
+            m.server_val_loss, m.server_val_acc = evaluate(
+                self.api, self.model_cfg, self.global_params,
+                self.server_data["val"])
+            _, m.server_test_acc = evaluate(
+                self.api, self.model_cfg, self.global_params,
+                self.server_data["test"])
+            dev_tr, dev_te, dev_vl = [], [], []
+            for s in range(min(self.n_sats, 8)):       # sampled device metrics
+                l, a = evaluate(self.api, self.model_cfg, self.global_params,
+                                {k: v[:64] for k, v in self.sat_data[s].items()})
+                dev_tr.append(a)
+                dev_vl.append(l)
+            m.dev_train_acc = float(np.mean(dev_tr))
+            m.dev_val_loss = float(np.mean(dev_vl))
+            m.dev_test_acc = m.server_test_acc
+        self.history.append(m)
+        return m
+
+    def run(self) -> list[RoundMetrics]:
+        for r in range(self.fl.n_rounds):
+            self.run_round(r)
+        return self.history

@@ -1,0 +1,9 @@
+from repro.data.synthetic import make_statlog, make_eurosat, DatasetSpec
+from repro.data.partition import dirichlet_partition, server_split, equal_partition
+from repro.data.tokens import synthetic_corpus, lm_batches
+
+__all__ = [
+    "make_statlog", "make_eurosat", "DatasetSpec",
+    "dirichlet_partition", "server_split", "equal_partition",
+    "synthetic_corpus", "lm_batches",
+]

@@ -1,0 +1,65 @@
+"""Client data partitioning for FL (paper §IV-A: 90% distributed among
+satellites for training, 10% held at the main server for testing)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def server_split(features, labels, server_frac: float = 0.1, seed: int = 0):
+    """-> (client_features, client_labels, server_data dict with val/test)."""
+    n = features.shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_srv = int(n * server_frac)
+    srv, cli = perm[:n_srv], perm[n_srv:]
+    half = n_srv // 2
+    server = {
+        "val": {"features": features[srv[:half]], "labels": labels[srv[:half]]},
+        "test": {"features": features[srv[half:]], "labels": labels[srv[half:]]},
+    }
+    return features[cli], labels[cli], server
+
+
+def equal_partition(features, labels, n_clients: int, seed: int = 0):
+    """IID equal split; every client gets the same sample count (truncated)."""
+    n = features.shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    per = n // n_clients
+    return [
+        {"features": features[perm[i * per:(i + 1) * per]],
+         "labels": labels[perm[i * per:(i + 1) * per]]}
+        for i in range(n_clients)
+    ]
+
+
+def dirichlet_partition(features, labels, n_clients: int, alpha: float = 0.5,
+                        seed: int = 0, min_per_client: int = 8):
+    """Non-IID label-skew split (Dirichlet over class proportions).
+
+    All clients are padded/truncated to the same sample count (the median)
+    so the jitted local-training function compiles once.
+    """
+    labels_np = np.asarray(labels)
+    n_classes = int(labels_np.max()) + 1
+    rng = np.random.default_rng(seed)
+    idx_by_class = [np.where(labels_np == c)[0] for c in range(n_classes)]
+    for idx in idx_by_class:
+        rng.shuffle(idx)
+    client_idx = [[] for _ in range(n_clients)]
+    for c, idx in enumerate(idx_by_class):
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for cl, part in enumerate(np.split(idx, cuts)):
+            client_idx[cl].extend(part.tolist())
+    sizes = [max(len(ci), min_per_client) for ci in client_idx]
+    target = int(np.median(sizes))
+    out = []
+    for ci in client_idx:
+        ci = np.array(ci if ci else rng.integers(0, len(labels_np), 1))
+        reps = int(np.ceil(target / len(ci)))
+        ci = np.tile(ci, reps)[:target]
+        out.append({"features": features[ci], "labels": labels[ci]})
+    return out

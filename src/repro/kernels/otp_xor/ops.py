@@ -1,0 +1,81 @@
+"""Public jit'd wrapper for the fused OTP-XOR + MAC kernel.
+
+Handles stream padding/alignment, builds the per-block key-power table,
+launches the kernel, and combines per-block partial tags into the final
+GF(2^31−1) tag — bit-identical to ``repro.security.mac.poly_mac_u32`` over
+the padded stream (tests assert this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.otp_xor.kernel import otp_xor_mac_blocks
+from repro.security.mac import P31, _mod31, addmod, mulmod, _powers
+
+
+def _pow_mod(r, e: int):
+    """r^e mod p by square-and-multiply (host ints for the exponent)."""
+    acc = jnp.uint32(1)
+    base = r
+    while e:
+        if e & 1:
+            acc = mulmod(acc, base)
+        base = mulmod(base, base)
+        e >>= 1
+    return acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "use_kernel"))
+def otp_xor_mac(msg_u32: jax.Array, pad_u32: jax.Array, r_key, s_key,
+                block_rows: int = 8, interpret: bool = True,
+                use_kernel: bool = True):
+    """Encrypt-and-tag a flat uint32 stream.
+
+    Returns (ciphertext (n,) uint32, tag uint32). The MAC is computed over
+    the zero-padded aligned stream (length folded into the tag), so tags
+    are comparable only for equal logical lengths — which the receiver
+    knows from the tree structure.
+    """
+    n = msg_u32.shape[0]
+    R, C = block_rows, 128
+    words_pb = R * C
+    nb = max((n + words_pb - 1) // words_pb, 1)
+    padded = nb * words_pb
+
+    r = _mod31(jnp.asarray(r_key, jnp.uint32)) | jnp.uint32(1)
+    s = _mod31(jnp.asarray(s_key, jnp.uint32))
+
+    msg = jnp.zeros((padded,), jnp.uint32).at[:n].set(msg_u32)
+    pad = jnp.zeros((padded,), jnp.uint32).at[:n].set(pad_u32[:n])
+    msg = msg.reshape(nb, R, C)
+    pad = pad.reshape(nb, R, C)
+
+    # per-block symbol powers: word w -> lo symbol r^(sb-2w), hi r^(sb-2w-1)
+    sb = 2 * words_pb
+    pw_all = _powers(r, sb)                     # r^1 .. r^sb
+    pw_desc = pw_all[::-1]                      # r^sb .. r^1
+    pw_lo = pw_desc[0::2].reshape(R, C)
+    pw_hi = pw_desc[1::2].reshape(R, C)
+    powers = jnp.stack([pw_lo, pw_hi])
+
+    if use_kernel:
+        ct_blocks, tags = otp_xor_mac_blocks(msg, pad, powers,
+                                             block_rows=R,
+                                             interpret=interpret)
+    else:
+        from repro.kernels.otp_xor.ref import otp_xor_mac_blocks_ref
+        ct_blocks, tags = otp_xor_mac_blocks_ref(msg, pad, powers)
+
+    # combine partial tags: tag = sum_j tags[j] * r^(sb*(nb-1-j)) + N*s
+    r_sb = _pow_mod(r, sb)
+    def body(carry, t):
+        # Horner over blocks: carry = carry * r^sb + tag_j
+        return addmod(mulmod(carry, r_sb), t), ()
+    tag, _ = jax.lax.scan(body, jnp.uint32(0), tags)
+    n_sym = jnp.uint32((2 * padded) % 0x7FFFFFFF)
+    tag = addmod(tag, mulmod(n_sym, s))
+    return ct_blocks.reshape(-1)[:n], tag

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused OTP-XOR + MAC kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.security.mac import addmod, mulmod, poly_mac_u32, _mod31
+
+
+def otp_xor_mac_ref(msg_u32: jax.Array, pad_u32: jax.Array, r_key, s_key):
+    """Reference for the whole op on the *aligned/padded* stream: XOR then
+    the security-layer MAC (the kernel must be bit-identical to this)."""
+    ct = msg_u32 ^ pad_u32
+    return ct, poly_mac_u32(ct, r_key, s_key)
+
+
+def otp_xor_mac_blocks_ref(msg, pad, powers):
+    """Block-level oracle matching the kernel's intermediate contract:
+    msg/pad (nb, R, C); powers (2, R, C) -> (ct, partial tags (nb,))."""
+    ct = msg ^ pad
+    lo = (ct & jnp.uint32(0xFFFF)) + jnp.uint32(1)
+    hi = (ct >> 16) + jnp.uint32(1)
+    terms = addmod(mulmod(lo, powers[0][None]), mulmod(hi, powers[1][None]))
+    flat = terms.reshape(terms.shape[0], -1)
+    # log-depth modular tree-sum per block
+    n = flat.shape[1]
+    while n > 1:
+        half = n // 2
+        flat = addmod(flat[:, :half], flat[:, half:n])
+        n = half
+    return ct, flat[:, 0]

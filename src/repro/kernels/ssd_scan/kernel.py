@@ -1,0 +1,114 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel (forward).
+
+The SSD duality splits the selective-scan into (i) an intra-chunk part
+that is pure matmul work — (Q,N)x(N,Q) score + (Q,Q)x(Q,P) mix, which the
+MXU eats — and (ii) a tiny inter-chunk recurrence on the (P,N) state. The
+kernel runs the grid (batch, heads, chunks) with the chunk axis innermost
+(sequential on TPU) carrying the running state in VMEM scratch: the
+recurrence never leaves VMEM, and HBM traffic is exactly one read of
+x/dt/B/C and one write of y — the memory lower bound for the op.
+
+Per chunk (Q = chunk length, P = head dim, N = state dim):
+    dA        = dt * A_h                         (Q,)
+    L         = exp(segsum(dA)) causal           (Q, Q)
+    y_diag    = ((C Bᵀ) ∘ L ∘ dt) x              (Q, P)
+    y_off     = (C state_inᵀ) ∘ exp(cumsum dA)   (Q, P)
+    state_out = state_in · exp(sum dA) + (B ∘ decay ∘ dt)ᵀ x    (P, N)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr,
+                *, Q: int, P: int, N: int, nchunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # (Q,)
+    A = a_ref[0, 0, 0]                           # scalar (per head)
+    Bm = b_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)         # (Q, N)
+
+    dA = dt * A                                  # (Q,) negative
+    dA_cs = jnp.cumsum(dA)                       # (Q,)
+
+    # intra-chunk: L[i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j
+    seg = dA_cs[:, None] - dA_cs[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    mix = scores * L * dt[None, :]               # (Q, Q) weight on x_j
+    y = jax.lax.dot_general(mix, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # off-diagonal: contribution of the incoming state
+    state = state_scr[...]                       # (P, N) f32
+    decay_out = jnp.exp(dA_cs)[:, None]          # (Q, 1)
+    y = y + jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * decay_out
+
+    # state update
+    chunk_decay = jnp.exp(dA_cs[-1])
+    decay_states = jnp.exp(dA_cs[-1] - dA_cs)    # (Q,)
+    wB = Bm * (decay_states * dt)[:, None]       # (Q, N)
+    state_scr[...] = state * chunk_decay + jax.lax.dot_general(
+        x, wB, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nchunks - 1)
+    def _emit_state():
+        st_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_bhsp(x: jax.Array, dt: jax.Array, A: jax.Array, Bv: jax.Array,
+                  Cv: jax.Array, chunk: int = 128, interpret: bool = True):
+    """x (B, H, S, P); dt (B, H, S); A (H,); Bv/Cv (B, G, S, N) with H % G == 0.
+
+    Returns (y (B, H, S, P), final_state (B, H, P, N) f32).
+    """
+    Bb, H, S, P = x.shape
+    G, N = Bv.shape[1], Bv.shape[3]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    rep = H // G
+
+    a2 = jnp.broadcast_to(A.astype(jnp.float32)[None, :, None], (Bb, H, 1))
+    dt3 = dt.reshape(Bb, H, nc, Q)
+
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_kernel, Q=Q, P=P, N=N, nchunks=nc),
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, c: (b, h, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, h // rep, c, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, h // rep, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt3, a2, Bv, Cv)
+    return y, st

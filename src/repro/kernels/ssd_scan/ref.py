@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the SSD scan kernel.
+
+Delegates to the model-layer chunked reference (``blocks.ssd_ref``) with a
+layout adapter — the kernel uses (B, H, S, P) head-major layout for clean
+BlockSpecs; the model uses (B, S, H, P).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.blocks import ssd_ref
+
+
+def ssd_scan_ref(x, dt, A, Bv, Cv, chunk: int = 128):
+    """Same signature/layout as the kernel: x (B,H,S,P), dt (B,H,S),
+    A (H,), Bv/Cv (B,G,S,N) -> (y (B,H,S,P), state (B,H,P,N))."""
+    xs = jnp.moveaxis(x, 1, 2)            # (B,S,H,P)
+    dts = jnp.moveaxis(dt, 1, 2)          # (B,S,H)
+    Bs = jnp.moveaxis(Bv, 1, 2)           # (B,S,G,N)
+    Cs = jnp.moveaxis(Cv, 1, 2)
+    y, st = ssd_ref(xs, dts, A, Bs, Cs, chunk=chunk)
+    return jnp.moveaxis(y, 2, 1), st

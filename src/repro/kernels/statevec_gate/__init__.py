@@ -1,0 +1,3 @@
+from repro.kernels.statevec_gate.ops import apply_gate
+
+__all__ = ["apply_gate"]

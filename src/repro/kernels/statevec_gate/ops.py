@@ -1,0 +1,75 @@
+"""Public wrapper for statevec_gate with a custom VJP.
+
+``apply_gate(state_complex, gate_2x2_complex, qubit)`` mirrors
+``repro.quantum.statevector.apply_1q`` but runs the Pallas butterfly
+kernel. Forward runs the kernel; backward applies the adjoint gate with
+the SAME kernel (the butterfly is its own transpose pattern) plus a small
+einsum for the gate cotangent — so VQC training can run end-to-end on the
+kernel path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.statevec_gate.kernel import apply_gate_planes
+from repro.kernels.statevec_gate.ref import (
+    adjoint_gate8, apply_gate_planes_ref, gate_grad,
+)
+
+
+def _pack_gate(gate: jax.Array) -> jax.Array:
+    g = gate.astype(jnp.complex64)
+    return jnp.stack([
+        g[0, 0].real, g[0, 0].imag, g[0, 1].real, g[0, 1].imag,
+        g[1, 0].real, g[1, 0].imag, g[1, 1].real, g[1, 1].imag,
+    ]).astype(jnp.float32)
+
+
+def _unpack_gate(g8: jax.Array) -> jax.Array:
+    re = jnp.stack([g8[0], g8[2], g8[4], g8[6]]).reshape(2, 2)
+    im = jnp.stack([g8[1], g8[3], g8[5], g8[7]]).reshape(2, 2)
+    return (re + 1j * im).astype(jnp.complex64)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _apply_planes(state_re, state_im, gate8, qubit, interpret, use_kernel):
+    if use_kernel:
+        return apply_gate_planes(state_re, state_im, gate8, qubit,
+                                 interpret=interpret)
+    return apply_gate_planes_ref(state_re, state_im, gate8, qubit)
+
+
+def _fwd(state_re, state_im, gate8, qubit, interpret, use_kernel):
+    out = _apply_planes(state_re, state_im, gate8, qubit, interpret,
+                        use_kernel)
+    return out, (state_re, state_im, gate8)
+
+
+def _bwd(qubit, interpret, use_kernel, res, cots):
+    state_re, state_im, gate8 = res
+    cot_re, cot_im = cots
+    adj = adjoint_gate8(gate8)
+    if use_kernel:
+        ar, ai = apply_gate_planes(cot_re, cot_im, adj, qubit,
+                                   interpret=interpret)
+    else:
+        ar, ai = apply_gate_planes_ref(cot_re, cot_im, adj, qubit)
+    g8_bar = gate_grad(state_re, state_im, cot_re, cot_im, qubit)
+    return ar, ai, g8_bar
+
+
+_apply_planes.defvjp(_fwd, _bwd)
+
+
+def apply_gate(state: jax.Array, gate: jax.Array, qubit: int,
+               interpret: bool = True, use_kernel: bool = True) -> jax.Array:
+    """Drop-in for statevector.apply_1q on 1-D complex states (the kernel
+    path; batched states should vmap)."""
+    g8 = _pack_gate(gate)
+    sr = state.real.astype(jnp.float32)
+    si = state.imag.astype(jnp.float32)
+    outr, outi = _apply_planes(sr, si, g8, qubit, interpret, use_kernel)
+    return (outr + 1j * outi).astype(jnp.complex64)

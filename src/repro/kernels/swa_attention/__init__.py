@@ -1,0 +1,3 @@
+from repro.kernels.swa_attention.ops import swa_attention
+
+__all__ = ["swa_attention"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for sliding-window attention (materialized scores)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def swa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      window: int = 0) -> jax.Array:
+    """q/k/v (BH, S, hd) -> o (BH, S, hd). fp32 softmax."""
+    BH, S, hd = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    pos = jnp.arange(S)
+    mask = pos[None, :] <= pos[:, None]
+    if window > 0:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,387 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = FLOPs / (chips × 197e12)     (bf16 MXU peak)
+    memory     = bytes / (chips × 819e9)      (HBM bandwidth)
+    collective = collective_bytes_per_device / 50e9   (ICI link)
+
+**Accounting caveat (measured, see EXPERIMENTS §Dry-run):** XLA:CPU's
+``compiled.cost_analysis()`` counts a ``while``/scan body ONCE — trip
+counts are ignored — and does not reliably report per-partition numbers.
+Since every model here scans over layers (compile-time discipline), raw
+cost_analysis under-reports by ~n_layers. We therefore:
+
+  * compute the FLOP/byte terms **analytically** from the architecture
+    (6·N_active·D + attention/SSM terms — the napkin math the perf loop
+    needs anyway), and
+  * parse the optimized HLO text for the collective schedule, expanding
+    while-loop bodies by their parsed trip counts (the loop-condition
+    constant), so per-layer collectives are multiplied by n_layers.
+
+Raw cost_analysis values are kept in the record (``hlo_*_body_once``) for
+reference.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, asdict
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # bytes / s / chip
+ICI_BW = 50e9               # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# HLO collective schedule with while-trip expansion
+# ---------------------------------------------------------------------------
+
+def _split_computations(hlo_text: str) -> dict:
+    """comp name -> list of instruction lines. Headers look like
+    ``%name (param: type, ...) -> ret {`` (possibly with nested parens in
+    the parameter tuple) or ``ENTRY %name ... {``; bodies are indented."""
+    comps, cur = {}, None
+    header = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-$]+)\s*\(")
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = header.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = []
+                comps[m.group(1)] = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+        if cur is not None and line.strip() and line.strip() != "}":
+            cur.append(line.strip())
+    return comps
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-$]+).*?body=%?([\w.\-$]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(while_line: str, cond_lines: list) -> int:
+    """Prefer the backend_config known_trip_count; fall back to the largest
+    integer constant in the loop condition."""
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for line in cond_lines:
+        if "constant(" in line:
+            for c in _CONST_RE.finditer(line):
+                best = max(best, int(c.group(1)))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind collective bytes for one execution of the entry computation,
+    expanding while bodies by their trip counts. Per-device numbers (the
+    SPMD-partitioned module)."""
+    comps = _split_computations(hlo_text)
+
+    kind_re = re.compile(
+        r"=\s*(.*?)\s((?:all-reduce|all-gather|reduce-scatter|all-to-all|"
+        r"collective-permute)(?:-start|-done)?)\(")
+
+    def line_kind(line):
+        m = kind_re.search(line)
+        if not m:
+            return None, 0
+        kind = m.group(2)
+        if kind.endswith("-done"):
+            return None, 0                   # counted at the -start op
+        base = kind[:-6] if kind.endswith("-start") else kind
+        return base, _shape_bytes(m.group(1))
+
+    memo = {}
+
+    def comp_cost(name, depth=0):
+        if name in memo or depth > 8 or name not in comps:
+            return memo.get(name, {k: 0 for k in _COLLECTIVES} | {"count": 0})
+        out = {k: 0 for k in _COLLECTIVES}
+        out["count"] = 0
+        for line in comps[name]:
+            base, nbytes = line_kind(line)
+            if base:
+                out[base] += nbytes
+                out["count"] += 1
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(line, comps.get(cond, []))
+                sub = comp_cost(body, depth + 1)
+                for k in _COLLECTIVES:
+                    out[k] += trips * sub[k]
+                out["count"] += trips * sub["count"]
+            elif re.search(r"\b(call|fusion|conditional)\b", line):
+                for cm in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)", line):
+                    sub = comp_cost(cm.group(1), depth + 1)
+                    for k in _COLLECTIVES:
+                        out[k] += sub[k]
+                    out["count"] += sub["count"]
+        memo[name] = out
+        return out
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: flat scan, no expansion
+        out = {k: 0 for k in _COLLECTIVES}
+        out["count"] = 0
+        for line in hlo_text.splitlines():
+            base, nbytes = line_kind(line.strip())
+            if base:
+                out[base] += nbytes
+                out["count"] += 1
+        return out
+    return comp_cost(entry)
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs / bytes (global; divided by chips in the roofline terms)
+# ---------------------------------------------------------------------------
+
+def _param_counts(cfg, api):
+    """(active_params, total_params, param_bytes) excluding embeddings."""
+    import jax
+    import numpy as np
+    p_abs = jax.eval_shape(lambda: api.init(cfg, jax.random.PRNGKey(0)))
+    import jax.tree_util as jtu
+    act = tot = byts = 0
+    for path, leaf in jtu.tree_leaves_with_path(p_abs):
+        names = [getattr(e, "key", None) for e in path]
+        n = int(np.prod(leaf.shape))
+        byts += n * leaf.dtype.itemsize
+        if "embed" in names or "pos_embed" in names:
+            continue
+        tot += n
+        if any(nm in ("we_g", "we_u", "we_d") for nm in names):
+            n = n * cfg.n_experts_per_tok // max(cfg.n_experts, 1)
+        act += n
+    return act, tot, byts
+
+
+def _attn_layers(cfg) -> list:
+    """Effective attention context multipliers per layer: (n_layers, window)."""
+    if cfg.family == "ssm":
+        return []
+    wins = []
+    for i in range(cfg.n_layers):
+        w = 0
+        if cfg.sliding_window and i not in cfg.global_attn_layers:
+            w = cfg.sliding_window
+        wins.append(w)
+    return wins
+
+
+def analytic_terms(cfg, api, shape) -> dict:
+    """Global FLOPs and HBM bytes for one step of this (arch, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    act, tot, pbytes = _param_counts(cfg, api)
+    H, hd = max(cfg.n_heads, 1), cfg.hd
+    wins = _attn_layers(cfg)
+
+    def attn_flops(q_len, ctx_avg):
+        # scores + mix: 2 matmuls, 2 flops/MAC
+        per_layer = 4.0 * B * q_len * ctx_avg * H * hd
+        return sum(per_layer for _ in wins)
+
+    def ssm_flops(q_len):
+        if cfg.family not in ("ssm", "hybrid"):
+            return 0.0
+        nh, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        # state update + readout per token per layer
+        per_layer = 6.0 * B * q_len * nh * P * N
+        return per_layer * cfg.n_layers
+
+    if shape.mode == "train":
+        D = B * S
+        flops = 6.0 * act * D + 3.0 * (attn_flops(S, S / 2) + ssm_flops(S))
+        # bytes: params read fwd+remat-fwd+bwd + grad write/read + update ~ 6x
+        # + saved residuals (2 per layer) read+write + logits fp32 x3
+        resid = 2 * D * cfg.d_model * 2 * max(cfg.n_layers, 1) * 2
+        logits = 3 * D * cfg.padded_vocab * 4 if cfg.padded_vocab else 0
+        byts = 6.0 * pbytes + resid + logits
+    elif shape.mode == "prefill":
+        D = B * S
+        flops = 2.0 * act * D + attn_flops(S, S / 2) + ssm_flops(S)
+        byts = pbytes + 2 * D * cfg.d_model * 2 * max(cfg.n_layers, 1)
+    else:  # decode: one token, full cache context
+        D = B
+        ctxs = [min(w, S) if w > 0 else S for w in wins]
+        aflops = sum(4.0 * B * 1 * c * H * hd for c in ctxs)
+        flops = 2.0 * act * D + aflops + ssm_flops(1)
+        kv_elt = 1.03 if cfg.kv_cache_dtype == "int8" else 2  # + fp16 scales
+        kv_bytes = sum(2 * B * c * max(cfg.n_kv_heads, 1) * hd * kv_elt
+                       for c in ctxs)
+        ssm_bytes = (B * cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state * 4
+                     * 2 * cfg.n_layers if cfg.family in ("ssm", "hybrid")
+                     else 0)
+        byts = pbytes + kv_bytes + ssm_bytes
+    return {"flops": flops, "bytes": byts, "active_params": act,
+            "total_params": tot, "param_bytes": pbytes}
+
+
+def analytic_memory_per_chip(cfg, api, shape, n_chips: int, model_size: int,
+                             data_size: int, fsdp: bool,
+                             seq_shard: bool = True) -> dict:
+    """Per-chip HBM estimate for the TPU target.
+
+    Needed because XLA:CPU legalizes every bf16 dot/elementwise via fp32
+    copies (verified: disabling float-normalization RET_CHECKs in the CPU
+    dot emitter), so ``memory_analysis()`` on this container systematically
+    doubles activation footprints that stay bf16 on TPU. Both numbers are
+    recorded; the fits-gate uses this estimate. Components follow the
+    napkin math of DESIGN §6 / EXPERIMENTS §Dry-run.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    act, tot, pbytes = _param_counts(cfg, api)
+    p_shard = model_size * (data_size if fsdp else 1)
+    params = pbytes / p_shard
+    d = max(cfg.d_model, 1)
+    dp = data_size
+    out = {"params": params}
+    if shape.mode == "train":
+        out["grads"] = params
+        # saved residual stream per layer (bf16), seq-sharded over model
+        seq_div = model_size if seq_shard else 1
+        B_loc = max(B // dp, 1)
+        out["saves"] = (cfg.n_layers * B_loc * S * d * 2) / seq_div
+        # transient attention probs (bf16, 2 live) for one layer
+        H = max(cfg.n_heads, 1)
+        Sq = S / seq_div
+        win = cfg.sliding_window or S
+        out["attn_tmp"] = 2 * B_loc * H * Sq * min(win, S) * 2 / \
+            (1 if seq_shard else model_size)
+        # CE chunk logits (f32 + bf16) over sharded vocab
+        out["ce_tmp"] = B_loc * min(1024, S) * cfg.padded_vocab * 6 / \
+            max(model_size, 1) if cfg.padded_vocab else 0
+        # embedding gradient (f32, vocab-sharded)
+        out["embed_grad"] = (cfg.padded_vocab * d * 4 / model_size
+                             if cfg.padded_vocab else 0)
+    elif shape.mode == "prefill":
+        B_loc = max(B // dp, 1)
+        out["acts"] = 2 * B_loc * S * d * 2 / max(model_size, 1)
+        H = max(cfg.n_heads, 1)
+        # > QCHUNK_THRESHOLD sequences use query-chunked attention: the
+        # quadratic buffer shrinks to (chunk × S) per head group
+        sq_eff = 512 if S > 8192 else S / max(model_size, 1)
+        h_eff = H / max(model_size, 1) if S > 8192 else H
+        out["attn_tmp"] = 2 * B_loc * h_eff * sq_eff * min(
+            cfg.sliding_window or S, S) * 2
+    else:  # decode: dominated by the KV/SSM cache
+        wins = _attn_layers(cfg)
+        ctxs = [min(w, S) if w > 0 else S for w in wins]
+        kv_elt = 1.03 if cfg.kv_cache_dtype == "int8" else 2
+        kv = sum(2 * B * c * max(cfg.n_kv_heads, 1) * cfg.hd * kv_elt
+                 for c in ctxs)
+        ssm = (cfg.n_layers * B * cfg.ssm_nheads * cfg.ssm_headdim
+               * cfg.ssm_state * 4 if cfg.family in ("ssm", "hybrid") else 0)
+        # cache shards over batch (data axes) and kv-heads/context (model)
+        out["cache"] = (kv + ssm) / (dp * model_size)
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the roofline record
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_global: float
+    bytes_global: float
+    coll_bytes_per_device: float
+    peak_memory_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    coll_breakdown: dict = field(default_factory=dict)
+    hlo_flops_body_once: float = 0.0
+    hlo_bytes_body_once: float = 0.0
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, n_chips: int,
+            compiled, cfg, api, shape) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    cbytes = float(sum(v for k, v in coll.items() if k != "count"))
+
+    mem = compiled.memory_analysis()
+    peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                 + getattr(mem, "argument_size_in_bytes", 0))
+
+    terms = analytic_terms(cfg, api, shape)
+    compute_s = terms["flops"] / (n_chips * PEAK_FLOPS)
+    memory_s = terms["bytes"] / (n_chips * HBM_BW)
+    collective_s = cbytes / ICI_BW
+    tdict = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(tdict, key=tdict.get)
+
+    # MODEL_FLOPS: 6·N_active·D (train) / 2·N_active·D (inference)
+    mult = 6.0 if shape.mode == "train" else 2.0
+    D = (shape.global_batch * shape.seq_len
+         if shape.mode in ("train", "prefill") else shape.global_batch)
+    model_flops = mult * terms["active_params"] * D
+    useful = model_flops / max(terms["flops"], 1.0)
+
+    return Roofline(arch, shape_name, mesh_name, terms["flops"],
+                    terms["bytes"], cbytes, peak, compute_s, memory_s,
+                    collective_s, dominant, model_flops, useful, coll,
+                    hlo_flops, hlo_bytes)
+
+
+def format_roofline_row(r: Roofline) -> str:
+    return (f"{r.arch:24s} {r.shape:12s} {r.mesh:6s} "
+            f"C={r.compute_s*1e3:9.3f}ms M={r.memory_s*1e3:9.3f}ms "
+            f"X={r.collective_s*1e3:9.3f}ms -> {r.dominant:10s} "
+            f"useful={r.useful_ratio:6.3f} "
+            f"peakHBM={r.peak_memory_bytes/2**30:7.2f}GiB")

@@ -1,0 +1,188 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+combination on the production mesh, WITHOUT allocating a single parameter
+(ShapeDtypeStruct stand-ins end to end).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun
+
+Per combo it prints/records:
+  * compiled.memory_analysis()  — proves the sharding fits 16 GiB/chip
+  * compiled.cost_analysis()    — FLOPs / bytes for §Roofline
+  * parsed collective schedule  — bytes per collective kind (§Roofline)
+
+A failure here (sharding mismatch, OOM at compile, unsupported collective)
+is a bug in the system, not in the run.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.shapes import INPUT_SHAPES, shape_for, supports_shape
+from repro.launch.analysis import analyze, format_roofline_row
+from repro.launch.mesh import data_axes_for, make_production_mesh
+from repro.launch.steps import build_bundle
+from repro.models.registry import ARCH_IDS, get_config
+from repro.sharding.context import DistCtx
+
+HBM_PER_CHIP = 16 * 2 ** 30      # v5e
+
+
+def combos(archs=None, shapes=None):
+    archs = archs or [a for a in ARCH_IDS if a != "vqc-satqfl"]
+    shapes = shapes or list(INPUT_SHAPES)
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            if not supports_shape(cfg, shape_for(s)):
+                continue
+            yield a, s
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, fsdp=None,
+            optimizer: str = "sgd", strategy: str = "tp",
+            seq_attn: bool = False, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    n_chips = mesh.devices.size
+    if fsdp is None:
+        # auto: models whose TP-sharded weights alone crowd 16 GiB/chip
+        # shard parameters over the data axes too
+        import numpy as np
+        cfg0 = get_config(arch)
+        from repro.models.registry import get_model
+        p_abs = jax.eval_shape(
+            lambda: get_model(cfg0).init(cfg0, jax.random.PRNGKey(0)))
+        nbytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                     for l in jax.tree_util.tree_leaves(p_abs))
+        fsdp = nbytes > 40e9       # only the 34B+ archs need FSDP
+    ctx = DistCtx(mesh=mesh, data_axes=data_axes_for(mesh), fsdp=fsdp,
+                  strategy=strategy, seq_shard=(strategy == "tp"),
+                  seq_attn=seq_attn)
+    t0 = time.time()
+    bundle = build_bundle(arch, shape_name, ctx, optimizer=optimizer)
+
+    from jax.sharding import NamedSharding
+
+    def to_named(spec_tree, shape_tree):
+        return jax.tree_util.tree_map(
+            lambda spec, _: NamedSharding(mesh, spec), spec_tree, shape_tree,
+            is_leaf=lambda x: hasattr(x, "index") and not hasattr(x, "shape"))
+
+    in_shardings = tuple(
+        jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec)
+        for spec in bundle.in_specs)
+
+    # donate what the step overwrites: params/opt_state (train), cache
+    # (decode) — the production step aliases these in place.
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[bundle.mode]
+    with mesh:
+        jitted = jax.jit(bundle.step_fn, in_shardings=in_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*bundle.arg_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    roof = analyze(arch, shape_name, mesh_name, n_chips, compiled,
+                   bundle.cfg, bundle.api, shape_for(shape_name))
+    mem = compiled.memory_analysis()
+    from repro.launch.analysis import analytic_memory_per_chip
+    amem = analytic_memory_per_chip(
+        bundle.cfg, bundle.api, shape_for(shape_name), n_chips,
+        ctx.model_size, ctx.data_size, fsdp)
+    # fits-gate uses the analytic TPU estimate: XLA:CPU legalizes bf16
+    # arithmetic via fp32 copies (see analysis.py), inflating measured
+    # temps ~2x vs the TPU target. Both numbers are recorded.
+    fits_measured = roof.peak_memory_bytes <= HBM_PER_CHIP
+    fits = amem["total"] <= HBM_PER_CHIP
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "mode": bundle.mode, "n_chips": n_chips, "fsdp": fsdp,
+        "optimizer": optimizer, "strategy": strategy, "seq_attn": seq_attn,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "fits_hbm": bool(fits),
+        "fits_hbm_measured_cpu": bool(fits_measured),
+        "analytic_mem_per_chip": {k: round(v / 2**30, 3)
+                                  for k, v in amem.items()},
+        "memory_analysis": str(mem),
+        **roof.to_dict(),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name} "
+              f"({bundle.mode}, {n_chips} chips)")
+        print(f"  memory_analysis: {mem}")
+        print(f"  {format_roofline_row(roof)}")
+        print(f"  collectives: {roof.coll_breakdown}")
+        print(f"  analytic/chip: { {k: round(v/2**30,2) for k,v in amem.items()} } GiB")
+        print(f"  fits 16GiB/chip: {fits} (analytic; cpu-measured "
+              f"{fits_measured})   lower {t_lower:.1f}s "
+              f"compile {t_compile:.1f}s")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fsdp", action="store_true", default=None,
+                    help="force FSDP (default: auto for 34B+ archs)")
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--strategy", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--seq-attn", action="store_true",
+                    help="§Perf A5: seq-sharded queries through attention")
+    ap.add_argument("--out", default=None, help="JSON output path or dir")
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        pairs = list(combos())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    records, failures = [], []
+    for arch, shape in pairs:
+        for mp in meshes:
+            try:
+                records.append(run_one(arch, shape, mp, fsdp=args.fsdp,
+                                       optimizer=args.optimizer,
+                                       strategy=args.strategy,
+                                       seq_attn=args.seq_attn))
+            except Exception as e:  # noqa: BLE001 — report and continue
+                traceback.print_exc()
+                failures.append({"arch": arch, "shape": shape,
+                                 "mesh": "multi" if mp else "single",
+                                 "error": repr(e)})
+
+    if args.out:
+        out = args.out
+        if not out.endswith(".json"):
+            os.makedirs(out, exist_ok=True)
+            tag = (pairs[0][0] + "_" + pairs[0][1] if len(pairs) == 1
+                   else "all")
+            out = os.path.join(out, f"dryrun_{tag}_{args.mesh}"
+                                    f"{'_fsdp' if args.fsdp else ''}.json")
+        with open(out, "w") as f:
+            json.dump({"records": records, "failures": failures}, f, indent=1)
+        print(f"[dryrun] wrote {out}")
+
+    print(f"[dryrun] {len(records)} ok, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,96 @@
+"""Serving driver: batched autoregressive decode with KV/SSM caches.
+
+On-orbit inference of the aggregated global model (the deployment mode the
+decode_32k / long_500k dry-run shapes exercise at production scale). On
+this CPU container it runs reduced configs end-to-end:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
+        --smoke --requests 4 --prompt-len 16 --gen 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def generate(cfg, api, params, prompts, gen_len: int, cache_len: int,
+             extras=None, greedy: bool = True, key=None):
+    """prompts (B, P) int32 -> (B, P+gen_len) tokens via prefill + decode."""
+    B, P = prompts.shape
+    cache = api.init_cache(cfg, B, cache_len)
+    if api.prefill_cross is not None:
+        emb = extras.get("audio_embeds", extras.get("image_embeds"))
+        cache = api.prefill_cross(cfg, params, cache, emb)
+
+    decode = jax.jit(lambda p, c, b: api.decode_step(cfg, p, c, b))
+
+    # prefill by stepping the decoder over the prompt (cache fills slot by
+    # slot; last logits seed generation)
+    logits = None
+    for t in range(P):
+        logits, cache = decode(params, cache,
+                               {"token": prompts[:, t],
+                                "pos": jnp.full((B,), t, jnp.int32)})
+    out = [prompts]
+    tok = None
+    for t in range(P, P + gen_len):
+        if greedy or key is None:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key, k = jax.random.split(key)
+            tok = jax.random.categorical(k, logits).astype(jnp.int32)
+        out.append(tok[:, None])
+        logits, cache = decode(params, cache,
+                               {"token": tok,
+                                "pos": jnp.full((B,), t, jnp.int32)})
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.models import get_config, get_model, smoke_variant
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init(cfg, key)
+
+    B, P = args.requests, args.prompt_len
+    prompts = jax.random.randint(jax.random.fold_in(key, 1), (B, P), 0,
+                                 cfg.vocab_size)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["audio_embeds"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.n_audio_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        extras["image_embeds"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 3), (B, cfg.n_image_tokens, cfg.d_model))
+
+    t0 = time.time()
+    toks = generate(cfg, api, params, prompts, args.gen,
+                    cache_len=P + args.gen, extras=extras)
+    dt = time.time() - t0
+    n_new = B * args.gen
+    print(f"[serve] {cfg.name}: {B} requests, {args.gen} new tokens each "
+          f"-> {n_new/dt:.1f} tok/s (wall {dt:.1f}s)")
+    print(f"[serve] sample request 0 tokens: {np.asarray(toks[0])[:P+8]}")
+    assert toks.shape == (B, P + args.gen)
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab_size)))
+    print("[serve] output shapes + token ranges OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Step builders + abstract input specs for every (arch × shape) combo.
+
+Everything here works on ``jax.ShapeDtypeStruct``s — the dry-run never
+allocates a parameter. The same builders back the real drivers
+(train.py / serve.py), which pass concrete arrays instead.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape, cfg_for_shape, shape_for
+from repro.models.config import ArchConfig
+from repro.models.registry import ModelApi, get_config, get_model
+from repro.nn.optim import Optimizer, get_optimizer, inv_sqrt_schedule
+from repro.sharding.context import DistCtx
+from repro.sharding.specs import batch_specs, cache_specs, param_specs
+
+
+class StepBundle(NamedTuple):
+    """Everything needed to lower one (arch × shape) combination."""
+    cfg: ArchConfig
+    api: ModelApi
+    step_fn: Any            # the function to jit
+    arg_shapes: tuple       # ShapeDtypeStructs (positional)
+    in_specs: tuple         # PartitionSpecs matching arg_shapes
+    out_specs: Any          # PartitionSpecs for outputs (or None = auto)
+    mode: str
+
+
+def abstract_params(cfg: ArchConfig, api: ModelApi):
+    return jax.eval_shape(lambda: api.init(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_cache(cfg: ArchConfig, api: ModelApi, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: api.init_cache(cfg, batch, cache_len))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for the model inputs of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.mode in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.mode == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "encdec":
+            batch["audio_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        return batch
+    # decode: ONE new token against a seq_len cache
+    return {"token": jax.ShapeDtypeStruct((B,), i32),
+            "pos": jax.ShapeDtypeStruct((B,), i32)}
+
+
+def _opt_for(cfg: ArchConfig, name: str = "sgd") -> Optimizer:
+    return get_optimizer(name, inv_sqrt_schedule(1e-2))
+
+
+def make_train_step(cfg: ArchConfig, api: ModelApi, optimizer: Optimizer,
+                    ctx: DistCtx):
+    def train_step(params, opt_state, batch, stepno):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss(cfg, p, batch, ctx))(params)
+        params, opt_state = optimizer.update(grads, opt_state, params, stepno)
+        return params, opt_state, loss
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, api: ModelApi, ctx: DistCtx):
+    def prefill_step(params, batch):
+        logits, _ = api.forward(cfg, params, batch, ctx, remat=False)
+        return logits[:, -1, :]          # next-token logits per request
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, api: ModelApi, ctx: DistCtx):
+    def decode_step(params, cache, batch):
+        return api.decode_step(cfg, params, cache, batch, ctx)
+    return decode_step
+
+
+def build_bundle(arch: str, shape_name: str, ctx: DistCtx,
+                 optimizer: str = "sgd", kv_int8: bool = False) -> StepBundle:
+    shape = shape_for(shape_name)
+    cfg = cfg_for_shape(get_config(arch), shape_name)
+    if kv_int8:
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    api = get_model(cfg)
+    p_abs = abstract_params(cfg, api)
+    p_spec = param_specs(cfg, p_abs, ctx)
+    batch = input_specs(cfg, shape)
+    b_spec = batch_specs(cfg, batch, ctx)
+    from jax.sharding import PartitionSpec as P
+
+    if shape.mode == "train":
+        opt = _opt_for(cfg, optimizer)
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        o_spec = _opt_specs(o_abs, p_spec)
+        step = make_train_step(cfg, api, opt, ctx)
+        stepno = jax.ShapeDtypeStruct((), jnp.int32)
+        return StepBundle(cfg, api, step,
+                          (p_abs, o_abs, batch, stepno),
+                          (p_spec, o_spec, b_spec, P()),
+                          (p_spec, o_spec, P()), "train")
+
+    if shape.mode == "prefill":
+        step = make_prefill_step(cfg, api, ctx)
+        return StepBundle(cfg, api, step, (p_abs, batch), (p_spec, b_spec),
+                          None, "prefill")
+
+    # decode
+    c_abs = abstract_cache(cfg, api, shape.global_batch, shape.seq_len)
+    c_spec = cache_specs(cfg, c_abs, ctx)
+    step = make_decode_step(cfg, api, ctx)
+    return StepBundle(cfg, api, step, (p_abs, c_abs, batch),
+                      (p_spec, c_spec, b_spec), (None, c_spec), "decode")
+
+
+def _opt_specs(o_abs, p_spec):
+    """Optimizer moments shard like their parameters."""
+    from repro.nn.optim import OptState
+    slots = o_abs.slots
+    if isinstance(slots, dict) and set(slots) == {"m", "v"}:
+        return OptState(slots={"m": p_spec, "v": p_spec})   # adamw
+    if jax.tree_util.tree_leaves(slots):
+        return OptState(slots=p_spec)                        # momentum
+    return OptState(slots=slots)                             # sgd: empty

@@ -1,0 +1,172 @@
+"""Training driver.
+
+Two entry modes:
+
+  * standard LM pretraining on the synthetic corpus (any --arch; --smoke
+    uses the reduced config so it runs on this CPU container):
+
+      PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+          --smoke --steps 50 --batch 8 --seq 128
+
+  * sat-QFL federated training (--fl): the in-graph stacked-satellite round
+    (repro.core.dist) over the host mesh — the small-scale twin of the
+    production FL dry-run:
+
+      PYTHONPATH=src python -m repro.launch.train --fl --mode sim \
+          --security secagg --rounds 5
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run_lm(args):
+    from repro.data.tokens import lm_batches, synthetic_corpus
+    from repro.models import get_config, get_model, smoke_variant
+    from repro.nn.optim import get_optimizer, cosine_schedule
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init(cfg, key)
+    n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] {cfg.name} ({'smoke' if args.smoke else 'full'}): "
+          f"{n_params/1e6:.1f}M params")
+
+    opt = get_optimizer(args.optimizer,
+                        cosine_schedule(args.lr, args.steps, warmup=10))
+    opt_state = opt.init(params)
+
+    corpus = synthetic_corpus(max(args.batch * args.seq * 50, 100_000),
+                              cfg.vocab_size, seed=args.seed)
+
+    def extras(batch_size):
+        out = {}
+        if cfg.family == "encdec":
+            out["audio_embeds"] = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(1),
+                (batch_size, cfg.n_audio_frames, cfg.d_model))
+        if cfg.family == "vlm":
+            out["image_embeds"] = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(2),
+                (batch_size, cfg.n_image_tokens, cfg.d_model))
+        return out
+
+    @jax.jit
+    def step(params, opt_state, batch, n):
+        loss, g = jax.value_and_grad(
+            lambda p: api.loss(cfg, p, batch))(params)
+        params, opt_state = opt.update(g, opt_state, params, n)
+        return params, opt_state, loss
+
+    mgr = None
+    start = 0
+    if args.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        if mgr.latest is not None:
+            (params, opt_state), start, _ = mgr.restore((params, opt_state))
+            print(f"[train] resumed from step {start}")
+
+    ex = extras(args.batch)
+    t0 = time.time()
+    losses = []
+    for i, batch in enumerate(lm_batches(corpus, args.batch, args.seq,
+                                         args.steps, seed=args.seed)):
+        if i < start:
+            continue
+        batch.update(ex)
+        params, opt_state, loss = step(params, opt_state, batch,
+                                       jnp.asarray(i, jnp.int32))
+        losses.append(float(loss))
+        if i % max(args.steps // 10, 1) == 0:
+            print(f"  step {i:4d}  loss {losses[-1]:.4f}  "
+                  f"({(time.time()-t0):.1f}s)")
+        if mgr and (i + 1) % max(args.steps // 3, 1) == 0:
+            mgr.save(i + 1, (params, opt_state), {"loss": losses[-1]})
+    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({'improved' if losses[-1] < losses[0] else 'NO IMPROVEMENT'})")
+    return losses
+
+
+def run_fl(args):
+    from repro.core import SatQFLConfig
+    from repro.core.dist import fl_init_state, make_fl_round
+    from repro.data import make_statlog, dirichlet_partition, server_split
+    from repro.models import get_config, get_model
+    from repro.nn.optim import sgd
+
+    cfg = get_config("vqc-satqfl").replace(
+        vqc_qubits=args.qubits, vqc_layers=2, n_features=args.qubits)
+    api = get_model(cfg)
+    n_sats = args.sats
+    fl = SatQFLConfig(mode=args.mode, local_steps=args.local_steps,
+                      batch_size=args.batch, lr=args.lr)
+    opt = sgd(fl.lr)
+    state = fl_init_state(cfg, api, opt, n_sats, jax.random.PRNGKey(args.seed))
+    round_fn = jax.jit(make_fl_round(cfg, api, fl, opt, n_sats,
+                                     security=args.security))
+
+    X, y = make_statlog(n_features=args.qubits)
+    Xc, yc, server = server_split(X, y)
+    sats = dirichlet_partition(Xc, yc, n_sats)
+    per = min(len(s["features"]) for s in sats)
+    E, Bn = fl.local_steps, fl.batch_size
+
+    rng = np.random.default_rng(args.seed)
+    seeds = jnp.asarray(rng.integers(0, 2**32, n_sats, dtype=np.uint32))
+    print(f"[fl] mode={fl.mode} security={args.security} sats={n_sats}")
+    for r in range(args.rounds):
+        idx = rng.integers(0, per, (n_sats, E, Bn))
+        batches = {
+            "features": jnp.stack([s["features"][i] for s, i in zip(sats, idx)]),
+            "labels": jnp.stack([s["labels"][i] for s, i in zip(sats, idx)]),
+        }
+        mask = jnp.asarray(rng.random(n_sats) < 0.8, jnp.float32)
+        state, metrics = round_fn(state, batches, mask, seeds)
+        # server metrics on the aggregated model (satellite 0's copy)
+        g_params = jax.tree_util.tree_map(lambda x: x[0], state.params)
+        from repro.core.round import evaluate
+        vl, va = evaluate(api, cfg, g_params, server["val"])
+        print(f"  round {r}: local_loss={float(metrics['loss']):.4f} "
+              f"val_loss={vl:.4f} val_acc={va:.3f}")
+    return state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (resume if present)")
+    # FL mode
+    ap.add_argument("--fl", action="store_true")
+    ap.add_argument("--mode", default="sim", choices=["sim", "seq", "async", "qfl"])
+    ap.add_argument("--security", default="none",
+                    choices=["none", "otp", "secagg"])
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--sats", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--qubits", type=int, default=6)
+    args = ap.parse_args(argv)
+    if args.fl:
+        run_fl(args)
+    else:
+        run_lm(args)
+
+
+if __name__ == "__main__":
+    main()

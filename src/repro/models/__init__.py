@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures + the paper's VQC.
+
+Every model is exposed through :class:`repro.models.registry.ModelApi` —
+pure functions over parameter pytrees so the sat-QFL core can aggregate /
+encrypt them uniformly.
+"""
+from repro.models.config import ArchConfig, smoke_variant
+from repro.models.registry import get_model, get_config, list_archs, ModelApi
+
+__all__ = ["ArchConfig", "smoke_variant", "get_model", "get_config",
+           "list_archs", "ModelApi"]

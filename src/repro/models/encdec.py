@@ -1,0 +1,208 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv feature extractor is the one allowed STUB:
+``batch["audio_embeds"]`` supplies precomputed frame embeddings of shape
+(B, n_audio_frames, d_model) (see DESIGN.md). This module implements the
+transformer backbone: a non-causal encoder over frames and a causal decoder
+with cross-attention, classic pre-LN layernorm + GELU MLP with biases.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.config import ArchConfig
+from repro.nn.common import layer_norm, softmax_cross_entropy
+from repro.nn.init import normal_init, scaled_init
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _ln_init(L, d, dtype):
+    pre = () if L is None else (L,)
+    return {"s": jnp.ones(pre + (d,), dtype), "b": jnp.zeros(pre + (d,), dtype)}
+
+
+def _ln(x, p, eps):
+    return layer_norm(x, p["s"], p["b"], eps)
+
+
+def _mlp_init(key, L, d, f, dtype):
+    pre = () if L is None else (L,)
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": scaled_init(k1, pre + (d, f), dtype),
+        "bi": jnp.zeros(pre + (f,), dtype),
+        "wo": scaled_init(k2, pre + (f, d), dtype),
+        "bo": jnp.zeros(pre + (d,), dtype),
+    }
+
+
+def _mlp(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"]) + p["bi"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"]) + p["bo"]
+
+
+def _sinusoid(n_pos: int, d: int) -> jax.Array:
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos * jnp.exp(-dim * math.log(10000.0) / (d // 2 - 1))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    d, Le, Ld = cfg.d_model, cfg.n_enc_layers, cfg.n_layers
+    ks = jax.random.split(key, 12)
+    enc = {
+        "attn": B.attn_init(ks[0], cfg, Le, dtype, bias=True),
+        "ln1": _ln_init(Le, d, dtype),
+        "mlp": _mlp_init(ks[1], Le, d, cfg.d_ff, dtype),
+        "ln2": _ln_init(Le, d, dtype),
+    }
+    dec = {
+        "attn": B.attn_init(ks[2], cfg, Ld, dtype, bias=True),
+        "ln1": _ln_init(Ld, d, dtype),
+        "xattn": B.attn_init(ks[3], cfg, Ld, dtype, bias=True),
+        "lnx": _ln_init(Ld, d, dtype),
+        "mlp": _mlp_init(ks[4], Ld, d, cfg.d_ff, dtype),
+        "ln2": _ln_init(Ld, d, dtype),
+    }
+    return {
+        "enc_layers": enc,
+        "enc_final_ln": _ln_init(None, d, dtype),
+        "dec_layers": dec,
+        "dec_final_ln": _ln_init(None, d, dtype),
+        "embed": normal_init(ks[5], (cfg.padded_vocab, d), dtype),
+        # learned decoder positions, sized for the serve cache (see DESIGN)
+        "pos_embed": normal_init(ks[6], (max(cfg.max_decode_len, 1), d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ArchConfig, params, audio_embeds):
+    """audio_embeds (B, F, d) -> encoder states (B, F, d)."""
+    Bb, F, d = audio_embeds.shape
+    x = audio_embeds + _sinusoid(F, d).astype(audio_embeds.dtype)[None]
+
+    def body(carry, lp):
+        h = _ln(carry, lp["ln1"], cfg.norm_eps)
+        carry = carry + B.attn_apply(lp["attn"], cfg, h,
+                                     jnp.broadcast_to(
+                                         jnp.arange(F, dtype=jnp.int32)[None],
+                                         (Bb, F)),
+                                     causal=False, use_rope=False)
+        h = _ln(carry, lp["ln2"], cfg.norm_eps)
+        carry = carry + _mlp(lp["mlp"], h)
+        return carry, ()
+
+    x, _ = jax.lax.scan(jax.checkpoint(body, prevent_cse=False), x,
+                        params["enc_layers"])
+    return _ln(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder forward (training: teacher forcing)
+# ---------------------------------------------------------------------------
+
+def forward_hidden(cfg: ArchConfig, params, batch, ctx=None,
+                   remat: bool = True):
+    """batch: {"audio_embeds": (B,F,d), "tokens": (B,S)}"""
+    enc = encode(cfg, params, batch["audio_embeds"])
+    tokens = batch["tokens"]
+    Bb, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bb, S))
+    pe = jnp.take(params["pos_embed"],
+                  jnp.minimum(jnp.arange(S), params["pos_embed"].shape[0] - 1),
+                  axis=0)
+    x = jnp.take(params["embed"], tokens, axis=0) + pe[None]
+
+    def body(carry, lp):
+        h = _ln(carry, lp["ln1"], cfg.norm_eps)
+        carry = carry + B.attn_apply(lp["attn"], cfg, h, positions,
+                                     use_rope=False)
+        h = _ln(carry, lp["lnx"], cfg.norm_eps)
+        carry = carry + B.cross_attn_apply(lp["xattn"], cfg, h, enc)
+        h = _ln(carry, lp["ln2"], cfg.norm_eps)
+        carry = carry + _mlp(lp["mlp"], h)
+        return carry, ()
+
+    f = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, _ = jax.lax.scan(f, x, params["dec_layers"])
+    return _ln(x, params["dec_final_ln"], cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params, batch, ctx=None, remat: bool = True):
+    from repro.models.decoder import _logits
+    x = forward_hidden(cfg, params, batch, ctx, remat)
+    return _logits(cfg, params, x), jnp.zeros((), jnp.float32)
+
+
+def loss(cfg: ArchConfig, params, batch, ctx=None):
+    from repro.models.decoder import chunked_ce
+    x = forward_hidden(cfg, params, batch, ctx)
+    return chunked_ce(cfg, params, x, batch["labels"], batch.get("mask"),
+                      ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "self": B.attn_cache_init(cfg, cfg.n_layers, batch, cache_len, dtype),
+        "cross": B.cross_attn_cache_init(cfg, cfg.n_layers, batch,
+                                         cfg.n_audio_frames, dtype),
+    }
+
+
+def prefill_cross(cfg: ArchConfig, params, cache, audio_embeds):
+    """Run the encoder once and fill the per-layer cross K/V cache."""
+    enc = encode(cfg, params, audio_embeds)
+
+    def body(_, lp):
+        kv = B.cross_attn_prefill_cache(lp["xattn"], cfg, enc)
+        return (), kv
+
+    _, cross = jax.lax.scan(body, (), params["dec_layers"])
+    return {"self": cache["self"], "cross": cross}
+
+
+def decode_step(cfg: ArchConfig, params, cache, batch, ctx=None):
+    """batch: {"token": (B,), "pos": (B,)}; cross K/V must be prefilled."""
+    token, pos = batch["token"], batch["pos"]
+    pe = jnp.take(params["pos_embed"],
+                  jnp.minimum(pos, params["pos_embed"].shape[0] - 1), axis=0)
+    x = (jnp.take(params["embed"], token, axis=0) + pe)[:, None, :]
+
+    def body(carry, lpc):
+        lp, lc_self, lc_cross = lpc
+        h = _ln(carry, lp["ln1"], cfg.norm_eps)
+        y, nc = B.attn_decode(lp["attn"], cfg, h, pos, lc_self, use_rope=False)
+        carry = carry + y
+        h = _ln(carry, lp["lnx"], cfg.norm_eps)
+        carry = carry + B.cross_attn_decode(lp["xattn"], cfg, h, lc_cross)
+        h = _ln(carry, lp["ln2"], cfg.norm_eps)
+        carry = carry + _mlp(lp["mlp"], h)
+        return carry, nc
+
+    x, new_self = jax.lax.scan(body, x,
+                               (params["dec_layers"], cache["self"],
+                                cache["cross"]))
+    x = _ln(x, params["dec_final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0, :]
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                           logits, B.NEG_INF)
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,83 @@
+"""Model registry: arch id -> (config, ModelApi).
+
+The FL core and the launcher address models only through this indirection,
+so a satellite's local model can be any architecture (or the paper's VQC).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Callable, NamedTuple
+
+from repro.models.config import ArchConfig
+
+
+class ModelApi(NamedTuple):
+    init: Callable            # (cfg, key) -> params
+    forward: Callable         # (cfg, params, batch, ctx=None) -> (logits, aux)
+    loss: Callable            # (cfg, params, batch, ctx=None) -> scalar
+    init_cache: Callable      # (cfg, batch, cache_len) -> cache
+    decode_step: Callable     # (cfg, params, cache, batch, ctx=None) -> (logits, cache)
+    prefill_cross: Callable | None = None  # encdec/vlm: fill cross-KV cache
+
+
+def _decoder_api() -> ModelApi:
+    from repro.models import decoder as M
+    return ModelApi(M.init, M.forward, M.loss, M.init_cache, M.decode_step)
+
+
+def _encdec_api() -> ModelApi:
+    from repro.models import encdec as M
+    return ModelApi(M.init, M.forward, M.loss, M.init_cache, M.decode_step,
+                    M.prefill_cross)
+
+
+def _vlm_api() -> ModelApi:
+    from repro.models import vlm as M
+    return ModelApi(M.init, M.forward, M.loss, M.init_cache, M.decode_step,
+                    M.prefill_cross)
+
+
+_FAMILY_API = {
+    "dense": _decoder_api,
+    "moe": _decoder_api,
+    "ssm": _decoder_api,
+    "hybrid": _decoder_api,
+    "encdec": _encdec_api,
+    "vlm": _vlm_api,
+}
+
+ARCH_IDS = [
+    "hymba-1.5b",
+    "qwen3-moe-235b-a22b",
+    "llama-3.2-vision-90b",
+    "whisper-tiny",
+    "tinyllama-1.1b",
+    "mamba2-130m",
+    "granite-34b",
+    "deepseek-moe-16b",
+    "qwen3-0.6b",
+    "olmo-1b",
+    "vqc-satqfl",            # the paper's own quantum model
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(_module_name(arch_id))
+    return mod.CONFIG
+
+
+def get_model(cfg_or_id) -> ModelApi:
+    if isinstance(cfg_or_id, str):
+        cfg_or_id = get_config(cfg_or_id)
+    if cfg_or_id.family == "vqc":
+        from repro.quantum import vqc_api
+        return vqc_api()
+    return _FAMILY_API[cfg_or_id.family]()
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,185 @@
+"""Llama-3.2-Vision-style VLM backbone.
+
+The ViT/SigLIP vision encoder + projector is the one allowed STUB:
+``batch["image_embeds"]`` supplies projected image-token embeddings of shape
+(B, n_image_tokens, d_model). This module implements the language decoder:
+standard llama self-attention layers interleaved with *gated cross-attention*
+layers every ``cross_every`` layers (tanh-gated, zero-init gates, as in
+Llama-3.2-Vision / Flamingo).
+
+Scan structure: the network is L = n_groups * cross_every layers; each group
+is (1 cross-attn layer + (cross_every-1) self-attn layers) and the model
+scans over stacked groups — keeping the HLO O(1 group) for a 100-layer model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.config import ArchConfig
+from repro.nn.common import softmax_cross_entropy
+from repro.nn.init import normal_init, scaled_init
+
+
+def _n_groups(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.cross_every == 0, (
+        f"{cfg.n_layers} layers not divisible into groups of {cfg.cross_every}")
+    return cfg.n_layers // cfg.cross_every
+
+
+def _self_window(cfg: ArchConfig) -> int:
+    return cfg.sliding_window
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    G = _n_groups(cfg)
+    S = cfg.cross_every - 1               # self layers per group
+    ks = jax.random.split(key, 8)
+
+    def stack_ones(*shape):
+        return jnp.ones(shape, dtype)
+
+    groups = {
+        "cross": {
+            "attn": B.attn_init(ks[0], cfg, G, dtype),
+            "ln1": stack_ones(G, cfg.d_model),
+            "gate_attn": jnp.zeros((G,), jnp.float32),   # tanh gate, zero-init
+            "ffn": B.ffn_init(ks[1], cfg, G, dtype),
+            "ln2": stack_ones(G, cfg.d_model),
+            "gate_ffn": jnp.zeros((G,), jnp.float32),
+        },
+        "selfs": {
+            "attn": B.attn_init(ks[2], cfg, (G, S), dtype),
+            "ln1": stack_ones(G, S, cfg.d_model),
+            "ffn": B.ffn_init(ks[3], cfg, (G, S), dtype),
+            "ln2": stack_ones(G, S, cfg.d_model),
+        },
+    }
+    return {
+        "embed": normal_init(ks[4], (cfg.padded_vocab, cfg.d_model), dtype),
+        "groups": groups,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": scaled_init(ks[5], (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+
+
+def _cross_block(cfg, gp, x, vision):
+    h = B.rms_norm(x, gp["ln1"], cfg.norm_eps)
+    a = B.cross_attn_apply(gp["attn"], cfg, h, vision)
+    x = x + jnp.tanh(gp["gate_attn"]).astype(x.dtype) * a
+    h = B.rms_norm(x, gp["ln2"], cfg.norm_eps)
+    f = B.ffn_apply(gp["ffn"], h)
+    return x + jnp.tanh(gp["gate_ffn"]).astype(x.dtype) * f
+
+
+def _self_block(cfg, lp, x, positions, window, ctx=None):
+    h = B.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + B.attn_apply(lp["attn"], cfg, h, positions, window=window,
+                         ctx=ctx)
+    h = B.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + B.ffn_apply(lp["ffn"], h)
+
+
+def forward_hidden(cfg: ArchConfig, params, batch, ctx=None,
+                   remat: bool = True):
+    """batch: {"tokens": (B,S), "image_embeds": (B,T_img,d)}"""
+    from repro.models.decoder import _seq_constraint
+    tokens = batch["tokens"]
+    vision = batch["image_embeds"]
+    Bb, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bb, S))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    win = _self_window(cfg)
+
+    def body(carry, gp):
+        carry = _seq_constraint(carry, ctx)
+        carry = _cross_block(cfg, gp["cross"], carry, vision)
+
+        def inner(c2, lp):
+            return _self_block(cfg, lp, _seq_constraint(c2, ctx), positions,
+                               win, ctx), ()
+
+        carry, _ = jax.lax.scan(inner, carry, gp["selfs"])
+        return _seq_constraint(carry, ctx), ()
+
+    f = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, _ = jax.lax.scan(f, x, params["groups"])
+    return B.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params, batch, ctx=None, remat: bool = True):
+    from repro.models.decoder import _logits
+    x = forward_hidden(cfg, params, batch, ctx, remat)
+    return _logits(cfg, params, x), jnp.zeros((), jnp.float32)
+
+
+def loss(cfg: ArchConfig, params, batch, ctx=None):
+    # chunked CE: never materializes the (B, S, 128k) fp32 logits (§Perf C3)
+    from repro.models.decoder import chunked_ce
+    x = forward_hidden(cfg, params, batch, ctx)
+    return chunked_ce(cfg, params, x, batch["labels"], batch.get("mask"),
+                      ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    G = _n_groups(cfg)
+    S = cfg.cross_every - 1
+    win = _self_window(cfg)
+    clen = min(win, cache_len) if win > 0 else cache_len
+    return {
+        "self": B.attn_cache_init(cfg, (G, S), batch, clen, dtype),
+        "cross": B.cross_attn_cache_init(cfg, G, batch, cfg.n_image_tokens,
+                                         dtype),
+    }
+
+
+def prefill_cross(cfg: ArchConfig, params, cache, image_embeds):
+    def body(_, gp):
+        return (), B.cross_attn_prefill_cache(gp["cross"]["attn"], cfg,
+                                              image_embeds)
+    _, cross = jax.lax.scan(body, (), params["groups"])
+    return {"self": cache["self"], "cross": cross}
+
+
+def decode_step(cfg: ArchConfig, params, cache, batch, ctx=None):
+    token, pos = batch["token"], batch["pos"]
+    x = jnp.take(params["embed"], token, axis=0)[:, None, :]
+    win = _self_window(cfg)
+
+    def body(carry, gpc):
+        gp, self_c, cross_c = gpc
+        # gated cross block (decode = same math on 1 token)
+        h = B.rms_norm(carry, gp["cross"]["ln1"], cfg.norm_eps)
+        a = B.cross_attn_decode(gp["cross"]["attn"], cfg, h, cross_c)
+        carry = carry + jnp.tanh(gp["cross"]["gate_attn"]).astype(carry.dtype) * a
+        h = B.rms_norm(carry, gp["cross"]["ln2"], cfg.norm_eps)
+        f = B.ffn_apply(gp["cross"]["ffn"], h)
+        carry = carry + jnp.tanh(gp["cross"]["gate_ffn"]).astype(carry.dtype) * f
+
+        def inner(c2, lpc):
+            lp, lc = lpc
+            h2 = B.rms_norm(c2, lp["ln1"], cfg.norm_eps)
+            y, nc = B.attn_decode(lp["attn"], cfg, h2, pos, lc, window=win)
+            c2 = c2 + y
+            h2 = B.rms_norm(c2, lp["ln2"], cfg.norm_eps)
+            return c2 + B.ffn_apply(lp["ffn"], h2), nc
+
+        carry, new_self = jax.lax.scan(inner, carry, (gp["selfs"], self_c))
+        return carry, new_self
+
+    x, new_self = jax.lax.scan(body, x,
+                               (params["groups"], cache["self"],
+                                cache["cross"]))
+    x = B.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0, :]
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                           logits, B.NEG_INF)
+    return logits, {"self": new_self, "cross": cache["cross"]}

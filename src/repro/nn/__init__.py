@@ -1,0 +1,54 @@
+"""NN substrate: functional layers, initializers, optimizers, schedules.
+
+Everything here is pure-functional over parameter pytrees — no module
+objects, no mutable state. Models in ``repro.models`` are built from these
+primitives; the FL core in ``repro.core`` treats their parameters as opaque
+pytrees.
+"""
+from repro.nn.common import (
+    rms_norm,
+    layer_norm,
+    apply_rope,
+    rope_angles,
+    swiglu,
+    gelu_mlp,
+    softmax_cross_entropy,
+    count_params,
+)
+from repro.nn.init import (
+    normal_init,
+    scaled_init,
+    zeros_init,
+    ones_init,
+)
+from repro.nn.optim import (
+    sgd,
+    momentum,
+    adamw,
+    OptState,
+    inv_sqrt_schedule,
+    cosine_schedule,
+    constant_schedule,
+)
+from repro.nn.pytree import (
+    tree_size,
+    tree_bytes,
+    tree_flatten_to_vector,
+    tree_unflatten_from_vector,
+    tree_cast,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_weighted_sum,
+)
+
+__all__ = [
+    "rms_norm", "layer_norm", "apply_rope", "rope_angles", "swiglu",
+    "gelu_mlp", "softmax_cross_entropy", "count_params",
+    "normal_init", "scaled_init", "zeros_init", "ones_init",
+    "sgd", "momentum", "adamw", "OptState",
+    "inv_sqrt_schedule", "cosine_schedule", "constant_schedule",
+    "tree_size", "tree_bytes", "tree_flatten_to_vector",
+    "tree_unflatten_from_vector", "tree_cast", "tree_zeros_like",
+    "tree_add", "tree_scale", "tree_weighted_sum",
+]

@@ -1,0 +1,139 @@
+"""Common functional layers shared by every architecture.
+
+Numerics policy: normalization and softmax statistics are computed in
+float32 regardless of activation dtype (bf16 on TPU), matching standard
+mixed-precision practice; outputs are cast back to the input dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array | None = None, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm (llama family). ``scale=None`` gives the non-parametric form."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(
+    x: jax.Array,
+    scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """LayerNorm. OLMo's non-parametric LN is ``scale=None, bias=None``."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for the given positions.
+
+    positions: integer array (...,) — typically (B, S) or (B,) for decode.
+    Returns (cos, sin) of shape positions.shape + (head_dim // 2,), float32.
+    Computed on the fly (no precomputed table) so 500k-context decode does
+    not materialize a (500k, hd) constant in the graph.
+    """
+    half = head_dim // 2
+    freq = jnp.exp(
+        -jnp.log(theta) * (jnp.arange(half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: (..., n_heads, head_dim); cos/sin broadcastable to (..., head_dim//2)
+    — e.g. (B, S, hd//2) against x (B, S, H, hd): we insert the head axis.
+    Uses the "split halves" convention (llama / HF style).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # insert head axis into cos/sin: (..., 1, half)
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP (llama family): down( silu(x@gate) * (x@up) )."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u     # native dtype (fp32 silu would stack fp32
+    return jnp.einsum("...f,fd->...d", h, w_down)  # grads over all layers)
+
+
+def gelu_mlp(
+    x: jax.Array,
+    w_in: jax.Array,
+    b_in: jax.Array | None,
+    w_out: jax.Array,
+    b_out: jax.Array | None,
+) -> jax.Array:
+    """GELU MLP (whisper / classic transformer)."""
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    if b_in is not None:
+        h = h + b_in
+    h = jax.nn.gelu(h)
+    y = jnp.einsum("...f,fd->...d", h, w_out)
+    if b_out is not None:
+        y = y + b_out
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy in fp32. labels: int ids; mask: 0/1 weights.
+
+    The label log-prob uses a masked reduction (iota == label) instead of
+    take_along_axis: a gather over the vocab axis would force an all-gather
+    of the model-sharded fp32 logits under pjit — the masked sum partitions
+    cleanly (each vocab shard reduces its slice, then a cheap psum).
+    """
+    lf = logits.astype(jnp.float32)
+    m_ = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m_
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m_[..., 0]
+    vocab_iota = jnp.arange(lf.shape[-1], dtype=labels.dtype)
+    onehot = (vocab_iota == labels[..., None])
+    ll = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        w = mask.astype(jnp.float32)
+        return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.mean(nll)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

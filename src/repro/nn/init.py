@@ -1,0 +1,42 @@
+"""Parameter initializers.
+
+All initializers take (key, shape, dtype) and return an array. Models use
+``scaled_init`` (truncated-normal with fan-in scaling) for projections and
+``normal_init`` for embeddings, matching common LLM practice.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key: jax.Array, shape, dtype=jnp.float32, stddev: float = 0.02) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def scaled_init(key: jax.Array, shape, dtype=jnp.float32, scale: float = 1.0) -> jax.Array:
+    """Truncated normal with 1/sqrt(fan_in) scaling (lecun-like).
+
+    fan_in is the second-to-last axis for matrices (d_in, d_out); for
+    stacked-layer params (L, d_in, d_out) the leading axes are ignored.
+    """
+    if len(shape) >= 2:
+        fan_in = shape[-2]
+    else:
+        fan_in = shape[-1]
+    stddev = scale / math.sqrt(max(fan_in, 1))
+    # truncated normal at 2 sigma, renormalized
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (x * stddev / 0.87962566).astype(dtype)
+
+
+def zeros_init(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    del key
+    return jnp.ones(shape, dtype)

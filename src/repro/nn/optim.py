@@ -1,0 +1,160 @@
+"""Optimizers and learning-rate schedules.
+
+The paper's local update is plain SGD (θ ← θ − η∇f, §II-A), and Proposition 1
+assumes η_t ∝ 1/√t — both are first-class here. AdamW is provided for the
+beyond-paper LLM workloads. Optimizers follow a tiny optax-like interface:
+
+    opt = sgd(lr=schedule)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params, step)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    """Generic optimizer state: a pytree of per-param slots (possibly empty)."""
+    slots: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jax.Array], tuple[Any, OptState]]
+    name: str = "opt"
+
+
+# ---------------------------------------------------------------------------
+# Schedules (callables step -> lr)
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inv_sqrt_schedule(base_lr: float, warmup: int = 0) -> Callable[[jax.Array], jax.Array]:
+    """η_t = base / sqrt(max(t, 1)) with optional linear warmup (Prop. 1)."""
+    def sched(step):
+        t = jnp.maximum(step.astype(jnp.float32), 1.0)
+        lr = base_lr * jax.lax.rsqrt(t)
+        if warmup > 0:
+            lr = jnp.where(step < warmup, base_lr * (step + 1) / warmup, lr)
+        return lr
+    return sched
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0,
+                    min_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos) if warmup > 0 else cos
+    return sched
+
+
+def _as_schedule(lr) -> Callable[[jax.Array], jax.Array]:
+    return lr if callable(lr) else constant_schedule(float(lr))
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def sgd(lr=1e-2) -> Optimizer:
+    """Paper-faithful plain SGD. Zero optimizer memory."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        del params
+        return OptState(slots=())
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+
+        def upd(p, g):
+            if p.dtype == jnp.float32:
+                return p - eta * g.astype(jnp.float32)
+            # low-precision params: scale the gradient by η in its own
+            # dtype — avoids materializing fp32 copies of every parameter
+            # (a full-model fp32 temp per stacked matrix otherwise)
+            return p - (eta.astype(g.dtype) * g).astype(p.dtype)
+
+        return jax.tree_util.tree_map(upd, params, grads), state
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+def momentum(lr=1e-2, beta: float = 0.9) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return OptState(slots=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        vel = jax.tree_util.tree_map(
+            lambda v, g: beta * v + g.astype(jnp.float32), state.slots, grads)
+        new = jax.tree_util.tree_map(
+            lambda p, v: (p.astype(jnp.float32) - eta * v).astype(p.dtype), params, vel)
+        return new, OptState(slots=vel)
+
+    return Optimizer(init=init, update=update, name="momentum")
+
+
+def adamw(lr=3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype=jnp.float32) -> Optimizer:
+    """AdamW with configurable moment dtype (bf16 moments halve optimizer HBM)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptState(slots={
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        })
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / c1
+            vhat = vf / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - eta * step_).astype(p.dtype),
+                    mf.astype(moment_dtype), vf.astype(moment_dtype))
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state.slots["m"])
+        flat_v = jax.tree_util.tree_leaves(state.slots["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return new_p, OptState(slots={"m": new_m, "v": new_v})
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def get_optimizer(name: str, lr) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr)
+    if name == "adamw":
+        return adamw(lr)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,68 @@
+"""Pytree utilities used by the FL core and the security layer.
+
+The sat-QFL aggregation/encryption layers operate on *opaque* parameter
+pytrees; these helpers provide the flat-vector view (for OTP encryption and
+MAC computation) and arithmetic (for FedAvg / weighted aggregation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_flatten_to_vector(tree, dtype=jnp.float32) -> jax.Array:
+    """Concatenate all leaves into a single 1-D vector (cast to dtype)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([x.astype(dtype).reshape(-1) for x in leaves])
+
+
+def tree_unflatten_from_vector(vec: jax.Array, like):
+    """Inverse of tree_flatten_to_vector given a structural template."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        out.append(vec[off:off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: (x.astype(jnp.float32) * s).astype(x.dtype), tree)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i weights[i] * trees[i], accumulated in fp32, cast back.
+
+    trees: list of pytrees with identical structure. weights: list of scalars
+    (python floats or traced scalars).
+    """
+    assert len(trees) == len(weights) and trees
+    def _wsum(*leaves):
+        acc = leaves[0].astype(jnp.float32) * weights[0]
+        for leaf, w in zip(leaves[1:], weights[1:]):
+            acc = acc + leaf.astype(jnp.float32) * w
+        return acc.astype(leaves[0].dtype)
+    return jax.tree_util.tree_map(_wsum, *trees)

@@ -1,0 +1,27 @@
+"""Quantum substrate: statevector simulator, VQC, BB84 QKD, teleportation.
+
+The paper's experiments run Qiskit circuits; here the same circuits are
+expressed as JAX statevector programs so they jit, vmap over batches, and
+differentiate exactly (with parameter-shift available as the paper-faithful
+gradient path). The TPU hot loop (gate application) has a Pallas kernel in
+``repro.kernels.statevec_gate``; this package is the reference/driver layer.
+"""
+from repro.quantum.statevector import (
+    init_state, apply_1q, apply_cz, apply_cnot, apply_h, apply_ry, apply_rz,
+    apply_u3, expect_z, probs, sample_measure, H, X, Z, ry_gate, rz_gate,
+    u3_gate,
+)
+from repro.quantum.vqc import (
+    vqc_init, vqc_logits, vqc_loss, vqc_api, parameter_shift_grad,
+)
+from repro.quantum.qkd import bb84_keygen, derive_pad_seed, qber_estimate
+from repro.quantum.teleport import teleport_state, teleport_params, fidelity
+
+__all__ = [
+    "init_state", "apply_1q", "apply_cz", "apply_cnot", "apply_h", "apply_ry",
+    "apply_rz", "apply_u3", "expect_z", "probs", "sample_measure",
+    "H", "X", "Z", "ry_gate", "rz_gate", "u3_gate",
+    "vqc_init", "vqc_logits", "vqc_loss", "vqc_api", "parameter_shift_grad",
+    "bb84_keygen", "derive_pad_seed", "qber_estimate",
+    "teleport_state", "teleport_params", "fidelity",
+]

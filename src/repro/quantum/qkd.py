@@ -1,0 +1,107 @@
+"""BB84 quantum key distribution (paper Algorithm 3).
+
+Simulates the full protocol with the statevector simulator, vectorized over
+qubits (each BB84 qubit is an independent 1-qubit circuit, so the whole
+batch is one vmapped program):
+
+  1. sender draws random bits + random bases (Z / X)
+  2. prepares |b> rotated into the chosen basis (H when basis = X)
+  3. optional eavesdropper intercept-resends in a random basis
+  4. receiver measures in its own random bases
+  5. sifting keeps positions where bases agree (~half)
+  6. a subset is compared for QBER estimation (25% expected under attack)
+
+The sifted key seeds a threefry PRF to expand one-time pads to parameter
+buffer length (``derive_pad_seed``) — the same computational-security
+compromise the paper makes with Fernet; see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BB84Result(NamedTuple):
+    sifted_key: jax.Array      # (n_sifted,) int32 0/1 — padded; use key_len
+    key_len: jax.Array         # scalar int32: number of valid sifted bits
+    sift_mask: jax.Array       # (n,) bool where bases matched
+    sender_bits: jax.Array
+    receiver_bits: jax.Array
+    qber: jax.Array            # measured error rate on the sifted bits
+
+
+def _measure_1q(key, state_re_im, basis):
+    """Measure a batch of 1-qubit states in Z (0) or X (1) bases.
+
+    state: (n, 2) complex packed as is; basis (n,) int. Returns bits (n,).
+    Measuring in X == apply H then measure Z.
+    """
+    a0, a1 = state_re_im[:, 0], state_re_im[:, 1]
+    inv = 1.0 / jnp.sqrt(2.0)
+    h0, h1 = (a0 + a1) * inv, (a0 - a1) * inv
+    b0 = jnp.where(basis == 1, h0, a0)
+    b1 = jnp.where(basis == 1, h1, a1)
+    p1 = jnp.abs(b1) ** 2 / (jnp.abs(b0) ** 2 + jnp.abs(b1) ** 2)
+    u = jax.random.uniform(key, p1.shape)
+    return (u < p1).astype(jnp.int32)
+
+
+def _prepare(bits, bases):
+    """|bit> in Z basis, H|bit> in X basis. Returns (n, 2) complex64."""
+    n = bits.shape[0]
+    inv = 1.0 / jnp.sqrt(2.0)
+    z0 = jnp.where(bits == 0, 1.0, 0.0)
+    z1 = jnp.where(bits == 0, 0.0, 1.0)
+    x0 = jnp.where(bits == 0, inv, inv)
+    x1 = jnp.where(bits == 0, inv, -inv)
+    a0 = jnp.where(bases == 1, x0, z0)
+    a1 = jnp.where(bases == 1, x1, z1)
+    return jnp.stack([a0, a1], axis=-1).astype(jnp.complex64)
+
+
+def bb84_keygen(key: jax.Array, n_bits: int, eavesdrop: bool = False) -> BB84Result:
+    """Run BB84 over n_bits channel uses."""
+    ks = jax.random.split(key, 6)
+    bits = jax.random.bernoulli(ks[0], 0.5, (n_bits,)).astype(jnp.int32)
+    bases_a = jax.random.bernoulli(ks[1], 0.5, (n_bits,)).astype(jnp.int32)
+    bases_b = jax.random.bernoulli(ks[2], 0.5, (n_bits,)).astype(jnp.int32)
+
+    states = _prepare(bits, bases_a)
+
+    if eavesdrop:
+        bases_e = jax.random.bernoulli(ks[3], 0.5, (n_bits,)).astype(jnp.int32)
+        eve_bits = _measure_1q(ks[4], states, bases_e)
+        states = _prepare(eve_bits, bases_e)     # intercept-resend
+
+    recv_bits = _measure_1q(ks[5], states, bases_b)
+
+    sift = bases_a == bases_b
+    # compact the sifted bits to the front (fixed shape; key_len gives count)
+    order = jnp.argsort(~sift, stable=True)
+    sifted = jnp.where(jnp.arange(n_bits) < jnp.sum(sift),
+                       recv_bits[order], 0)
+    errors = jnp.sum(jnp.where(sift, (recv_bits != bits).astype(jnp.int32), 0))
+    qber = errors / jnp.maximum(jnp.sum(sift), 1)
+    return BB84Result(sifted_key=sifted, key_len=jnp.sum(sift),
+                      sift_mask=sift, sender_bits=bits,
+                      receiver_bits=recv_bits, qber=qber)
+
+
+def qber_estimate(res: BB84Result) -> jax.Array:
+    return res.qber
+
+
+def derive_pad_seed(sifted_key: jax.Array, key_len) -> jax.Array:
+    """Fold sifted key bits into a 32-bit seed for threefry pad expansion.
+
+    (PRF expansion of a QKD-established secret — computational security for
+    bulk data, as with the paper's QKD+Fernet mode.)
+    """
+    n = sifted_key.shape[0]
+    valid = (jnp.arange(n) < key_len).astype(jnp.uint32)
+    bits = sifted_key.astype(jnp.uint32) * valid
+    weights = jnp.mod(jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761),
+                      jnp.uint32(2 ** 31))
+    return jnp.sum(bits * weights, dtype=jnp.uint32)

@@ -1,0 +1,178 @@
+"""JAX statevector simulator.
+
+States are complex64 arrays of shape (..., 2**n) with **little-endian**
+qubit order (qubit 0 is the least-significant index bit). Gate application
+uses reshape/einsum (contiguous strides — the pattern the Pallas kernel in
+``repro.kernels.statevec_gate`` tiles for VMEM); controlled gates use the
+partner-index formulation (gather + where), which lowers to vectorized ops.
+
+Everything jits and vmaps; the circuit layer (vqc/qkd/teleport) builds on
+these primitives.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+CDTYPE = jnp.complex64
+
+# ---------------------------------------------------------------------------
+# gates
+# ---------------------------------------------------------------------------
+
+H = (1.0 / math.sqrt(2.0)) * jnp.array([[1, 1], [1, -1]], CDTYPE)
+X = jnp.array([[0, 1], [1, 0]], CDTYPE)
+Y = jnp.array([[0, -1j], [1j, 0]], CDTYPE)
+Z = jnp.array([[1, 0], [0, -1]], CDTYPE)
+
+
+def ry_gate(theta) -> jax.Array:
+    t = jnp.asarray(theta, jnp.float32) / 2
+    c, s = jnp.cos(t), jnp.sin(t)
+    return jnp.stack([jnp.stack([c, -s], -1),
+                      jnp.stack([s, c], -1)], -2).astype(CDTYPE)
+
+
+def rz_gate(phi) -> jax.Array:
+    p = jnp.asarray(phi, jnp.float32) / 2
+    e_m = jnp.exp(-1j * p.astype(CDTYPE))
+    e_p = jnp.exp(1j * p.astype(CDTYPE))
+    zero = jnp.zeros_like(e_m)
+    return jnp.stack([jnp.stack([e_m, zero], -1),
+                      jnp.stack([zero, e_p], -1)], -2)
+
+
+def u3_gate(theta, phi, lam) -> jax.Array:
+    """Standard U(θ, φ, λ) — the paper's parameter-encoding unitary (Alg. 2/4)."""
+    t = jnp.asarray(theta, jnp.float32) / 2
+    c = jnp.cos(t).astype(CDTYPE)
+    s = jnp.sin(t).astype(CDTYPE)
+    phi = jnp.asarray(phi, jnp.float32).astype(CDTYPE)
+    lam = jnp.asarray(lam, jnp.float32).astype(CDTYPE)
+    return jnp.stack([
+        jnp.stack([c, -jnp.exp(1j * lam) * s], -1),
+        jnp.stack([jnp.exp(1j * phi) * s, jnp.exp(1j * (phi + lam)) * c], -1),
+    ], -2)
+
+
+# ---------------------------------------------------------------------------
+# state construction / application
+# ---------------------------------------------------------------------------
+
+def init_state(n_qubits: int, batch: tuple = ()) -> jax.Array:
+    """|0...0> statevector, optionally batched."""
+    dim = 2 ** n_qubits
+    state = jnp.zeros(batch + (dim,), CDTYPE)
+    return state.at[..., 0].set(1.0)
+
+
+def apply_1q(state: jax.Array, gate: jax.Array, qubit: int) -> jax.Array:
+    """Apply a 2x2 gate to `qubit`. state (..., 2^n); gate (..., 2, 2)
+    (broadcast against batch dims)."""
+    dim = state.shape[-1]
+    n = dim.bit_length() - 1
+    lead = state.shape[:-1]
+    lo = 2 ** qubit
+    hi = dim // (2 * lo)
+    st = state.reshape(lead + (hi, 2, lo))
+    if gate.ndim == 2:
+        out = jnp.einsum("ab,...hbl->...hal", gate, st)
+    else:
+        out = jnp.einsum("...ab,...hbl->...hal", gate, st)
+    return out.reshape(lead + (dim,))
+
+
+def apply_h(state, qubit):
+    return apply_1q(state, H, qubit)
+
+
+def apply_ry(state, theta, qubit):
+    return apply_1q(state, ry_gate(theta), qubit)
+
+
+def apply_rz(state, phi, qubit):
+    return apply_1q(state, rz_gate(phi), qubit)
+
+
+def apply_u3(state, theta, phi, lam, qubit):
+    return apply_1q(state, u3_gate(theta, phi, lam), qubit)
+
+
+def _bit(idx, q):
+    return (idx >> q) & 1
+
+
+def apply_cz(state: jax.Array, q1: int, q2: int) -> jax.Array:
+    """Controlled-Z: phase-flip where both bits are 1 (diagonal — no gather)."""
+    dim = state.shape[-1]
+    idx = jnp.arange(dim)
+    sign = jnp.where((_bit(idx, q1) & _bit(idx, q2)) == 1, -1.0, 1.0)
+    return state * sign.astype(CDTYPE)
+
+
+def apply_cnot(state: jax.Array, control: int, target: int) -> jax.Array:
+    """CNOT via partner-index gather: swap amplitudes where control=1."""
+    dim = state.shape[-1]
+    idx = jnp.arange(dim)
+    partner = idx ^ (1 << target)
+    swapped = jnp.take(state, partner, axis=-1)
+    cond = (_bit(idx, control) == 1)
+    return jnp.where(cond, swapped, state)
+
+
+def apply_controlled_1q(state, gate, control: int, target: int) -> jax.Array:
+    """General controlled single-qubit gate (used for conditioned corrections)."""
+    dim = state.shape[-1]
+    idx = jnp.arange(dim)
+    partner = idx ^ (1 << target)
+    tbit = _bit(idx, target)
+    # out[i] = g[t, t] * s[i] + g[t, 1-t] * s[partner]  where control=1
+    g_tt = jnp.where(tbit == 0, gate[0, 0], gate[1, 1])
+    g_to = jnp.where(tbit == 0, gate[0, 1], gate[1, 0])
+    mixed = g_tt * state + g_to * jnp.take(state, partner, axis=-1)
+    cond = (_bit(idx, control) == 1)
+    return jnp.where(cond, mixed, state)
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def probs(state: jax.Array) -> jax.Array:
+    return (state.real ** 2 + state.imag ** 2).astype(jnp.float32)
+
+
+def expect_z(state: jax.Array, qubit: int) -> jax.Array:
+    """⟨Z_qubit⟩ ∈ [-1, 1]."""
+    p = probs(state)
+    dim = state.shape[-1]
+    sign = jnp.where(_bit(jnp.arange(dim), qubit) == 0, 1.0, -1.0)
+    return jnp.sum(p * sign, axis=-1)
+
+
+def sample_measure(key: jax.Array, state: jax.Array, shots: int) -> jax.Array:
+    """Sample `shots` computational-basis outcomes. Returns (..., shots) int32."""
+    p = probs(state)
+    logp = jnp.log(jnp.maximum(p, 1e-30))
+    return jax.random.categorical(key, logp, axis=-1,
+                                  shape=logp.shape[:-1] + (shots,))
+
+
+def measure_qubit(key: jax.Array, state: jax.Array, qubit: int):
+    """Projective measurement of one qubit: returns (outcome, collapsed state).
+
+    outcome: int32 scalar (or batch); the state is renormalized.
+    """
+    p = probs(state)
+    dim = state.shape[-1]
+    mask1 = (_bit(jnp.arange(dim), qubit) == 1)
+    p1 = jnp.sum(jnp.where(mask1, p, 0.0), axis=-1)
+    u = jax.random.uniform(key, p1.shape)
+    outcome = (u < p1).astype(jnp.int32)
+    keep = jnp.where(outcome[..., None] == 1, mask1, ~mask1)
+    collapsed = jnp.where(keep, state, 0.0)
+    norm = jnp.sqrt(jnp.sum(probs(collapsed), axis=-1, keepdims=True))
+    return outcome, collapsed / jnp.maximum(norm, 1e-30).astype(CDTYPE)

@@ -1,0 +1,99 @@
+"""Quantum teleportation (paper Algorithm 4) as a feasibility primitive.
+
+3-qubit register, little-endian: Q=0 (secret), A=1 (sender e-bit),
+B=2 (receiver e-bit).
+
+  1. entangle A,B: H(A); CNOT(A->B)            (shared Bell pair |Φ+>)
+  2. encode secret: U(θ, φ, 0) on Q
+  3. Bell-basis measurement: CNOT(Q->A); H(Q); measure Q -> m0, A -> m1
+  4. corrections on B: X if m1, Z if m0
+  5. B now holds U(θ,φ,0)|0> — decoded back to (θ, φ) from amplitudes
+
+``teleport_params`` vmaps this over pairs of model parameters, which is the
+paper's Algorithm 2 "transfer θ, φ via teleportation" — and the reason the
+paper notes d ≤ 2^m feasibility: each qubit carries two reals.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quantum import statevector as sv
+
+
+def fidelity(psi: jax.Array, phi: jax.Array) -> jax.Array:
+    """|<psi|phi>|^2 for statevectors."""
+    ov = jnp.sum(jnp.conj(psi) * phi, axis=-1)
+    return (jnp.abs(ov) ** 2).astype(jnp.float32)
+
+
+def teleport_state(key: jax.Array, theta, phi):
+    """Teleport U(θ,φ,0)|0> from Q to B with sampled measurements.
+
+    Returns (received_1q_state (2,) complex, fidelity vs ideal, m0, m1).
+    """
+    st = sv.init_state(3)
+    st = sv.apply_h(st, 1)
+    st = sv.apply_cnot(st, 1, 2)
+    st = sv.apply_u3(st, theta, phi, 0.0, 0)
+    st = sv.apply_cnot(st, 0, 1)
+    st = sv.apply_h(st, 0)
+    k0, k1 = jax.random.split(key)
+    m0, st = sv.measure_qubit(k0, st, 0)
+    m1, st = sv.measure_qubit(k1, st, 1)
+    # corrections on B conditioned on classical bits
+    stx = sv.apply_1q(st, sv.X, 2)
+    st = jnp.where(m1 == 1, stx, st)
+    stz = sv.apply_1q(st, sv.Z, 2)
+    st = jnp.where(m0 == 1, stz, st)
+    # extract B's reduced state: after measurement Q,A are classical (m0,m1)
+    idx_b0 = m0 + 2 * m1            # basis index with B bit = 0
+    full = st
+    b0 = full[idx_b0]
+    b1 = full[idx_b0 + 4]
+    received = jnp.stack([b0, b1])
+    received = received / jnp.sqrt(jnp.sum(jnp.abs(received) ** 2)).astype(sv.CDTYPE)
+    ideal = u3_col(theta, phi)
+    return received, fidelity(ideal, received), m0, m1
+
+
+def u3_col(theta, phi):
+    """U(θ,φ,0)|0> = [cos(θ/2), e^{iφ} sin(θ/2)]."""
+    t = jnp.asarray(theta, jnp.float32) / 2
+    return jnp.stack([
+        jnp.cos(t).astype(sv.CDTYPE),
+        (jnp.exp(1j * jnp.asarray(phi, jnp.float32).astype(sv.CDTYPE))
+         * jnp.sin(t).astype(sv.CDTYPE)),
+    ])
+
+
+def decode_state(received: jax.Array):
+    """Recover (θ, φ) from a received single-qubit state (inverse of u3_col).
+
+    Uses a global-phase fix: rotate so amplitude 0 is real-positive.
+    """
+    a0, a1 = received[0], received[1]
+    gp = jnp.where(jnp.abs(a0) > 1e-7, a0 / jnp.maximum(jnp.abs(a0), 1e-30), 1.0)
+    a1 = a1 * jnp.conj(gp)
+    theta = 2.0 * jnp.arccos(jnp.clip(jnp.abs(a0), 0.0, 1.0))
+    phi = jnp.angle(a1)
+    return theta.astype(jnp.float32), phi.astype(jnp.float32)
+
+
+def teleport_params(key: jax.Array, thetas: jax.Array, phis: jax.Array):
+    """Teleport a vector of (θ, φ) parameter pairs (Algorithm 2 step 5-8).
+
+    thetas/phis: (n,) float32 in [0, π] / [-π, π]. Returns (θ', φ', mean
+    fidelity). Exact up to measurement randomness — corrections make the
+    protocol deterministic, so fidelity is 1 and θ'=θ, φ'=φ up to fp error.
+    """
+    n = thetas.shape[0]
+    keys = jax.random.split(key, n)
+
+    def one(k, t, p):
+        received, fid, _, _ = teleport_state(k, t, p)
+        td, pd = decode_state(received)
+        return td, pd, fid
+
+    td, pd, fid = jax.vmap(one)(keys, thetas, phis)
+    return td, pd, jnp.mean(fid)

@@ -1,0 +1,139 @@
+"""Variational quantum classifier — the paper's QFL workload (§IV).
+
+Circuit (matching the Qiskit VQC pattern the paper uses):
+  1. angle encoding: RY(x_i) on qubit i for each of n_features inputs
+  2. ansatz, L layers: RY(θ_l,i) RZ(φ_l,i) per qubit + ring of CZ entanglers
+  3. readout: ⟨Z_i⟩ on the first n_classes qubits -> logits (scaled + biased
+     by a tiny classical head, standard hybrid practice)
+
+Gradients: exact autodiff through the statevector (fast path) and
+parameter-shift (paper-faithful path, what Qiskit QNN computes) — tests
+assert both agree.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.quantum import statevector as sv
+
+
+def vqc_init(cfg: ArchConfig, key) -> dict:
+    nq, L = cfg.vqc_qubits, cfg.vqc_layers
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "theta": jax.random.uniform(k1, (L, nq), jnp.float32, 0.0, jnp.pi),
+        "phi": jax.random.uniform(k2, (L, nq), jnp.float32, 0.0, jnp.pi),
+        "w_out": jnp.ones((cfg.n_classes,), jnp.float32) * 3.0,
+        "b_out": jnp.zeros((cfg.n_classes,), jnp.float32),
+    }
+
+
+def _circuit_state(cfg: ArchConfig, params, x, apply_1q=None):
+    """Statevector after encoding + ansatz for one sample x (n_features,)."""
+    ap = apply_1q or sv.apply_1q
+    nq, L = cfg.vqc_qubits, cfg.vqc_layers
+    state = sv.init_state(nq)
+    for q in range(min(cfg.n_features, nq)):
+        state = ap(state, sv.ry_gate(x[q]), q)
+    for l in range(L):
+        for q in range(nq):
+            state = ap(state, sv.ry_gate(params["theta"][l, q]), q)
+            state = ap(state, sv.rz_gate(params["phi"][l, q]), q)
+        for q in range(nq):
+            state = sv.apply_cz(state, q, (q + 1) % nq)
+    return state
+
+
+def _logits_single(cfg: ArchConfig, params, x, apply_1q=None):
+    state = _circuit_state(cfg, params, x, apply_1q)
+    exps = jnp.stack([sv.expect_z(state, q) for q in range(cfg.n_classes)])
+    return params["w_out"] * exps + params["b_out"]
+
+
+def vqc_logits(cfg: ArchConfig, params, features, apply_1q=None):
+    """features (B, n_features) -> logits (B, n_classes)."""
+    return jax.vmap(lambda x: _logits_single(cfg, params, x, apply_1q))(features)
+
+
+def vqc_loss(cfg: ArchConfig, params, batch, ctx=None):
+    logits = vqc_logits(cfg, params, batch["features"])
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def vqc_accuracy(cfg: ArchConfig, params, batch):
+    logits = vqc_logits(cfg, params, batch["features"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# parameter-shift gradients (paper-faithful: Qiskit QNN's gradient rule)
+# ---------------------------------------------------------------------------
+
+def parameter_shift_grad(cfg: ArchConfig, params, batch):
+    """∂loss/∂(θ, φ) via the ±π/2 parameter-shift rule.
+
+    The shift rule differentiates the circuit *expectations* (the logits,
+    which are linear in ⟨Z⟩), not the nonlinear loss: the CE is chained in
+    classically (dL/dlogits is closed-form softmax − onehot). Exact for
+    Pauli-rotation gates, which ours are — matching what Qiskit's QNN
+    gradient computes. Returns a grads pytree matching ``params``.
+    """
+    feats, labels = batch["features"], batch["labels"]
+    Bn = feats.shape[0]
+    shift = jnp.pi / 2
+
+    logits0 = vqc_logits(cfg, params, feats)
+    p = jax.nn.softmax(logits0, axis=-1)
+    dL_dlogits = (p - jax.nn.one_hot(labels, cfg.n_classes)) / Bn   # (B, C)
+
+    def logits_at(theta, phi):
+        return vqc_logits(cfg, {**params, "theta": theta, "phi": phi}, feats)
+
+    base_theta, base_phi = params["theta"], params["phi"]
+
+    def shift_grad(base, is_theta):
+        flat = base.reshape(-1)
+
+        def one(i):
+            e = jnp.zeros_like(flat).at[i].set(shift).reshape(base.shape)
+            if is_theta:
+                dlogits = 0.5 * (logits_at(base + e, base_phi)
+                                 - logits_at(base - e, base_phi))
+            else:
+                dlogits = 0.5 * (logits_at(base_theta, base + e)
+                                 - logits_at(base_theta, base - e))
+            return jnp.sum(dL_dlogits * dlogits)
+
+        return jax.lax.map(one, jnp.arange(flat.shape[0])).reshape(base.shape)
+
+    g_theta = shift_grad(base_theta, True)
+    g_phi = shift_grad(base_phi, False)
+    g_head = jax.grad(
+        lambda w, b: vqc_loss(cfg, {**params, "w_out": w, "b_out": b}, batch),
+        argnums=(0, 1))(params["w_out"], params["b_out"])
+    return {"theta": g_theta, "phi": g_phi,
+            "w_out": g_head[0], "b_out": g_head[1]}
+
+
+# ---------------------------------------------------------------------------
+# ModelApi adapter (so a satellite's local model can be the VQC)
+# ---------------------------------------------------------------------------
+
+def _no_serve(*a, **k):
+    raise NotImplementedError("VQC is a classifier — no autoregressive serve")
+
+
+def vqc_api():
+    from repro.models.registry import ModelApi
+
+    def fwd(cfg, params, batch, ctx=None):
+        return vqc_logits(cfg, params, batch["features"]), jnp.zeros((), jnp.float32)
+
+    return ModelApi(vqc_init, fwd, vqc_loss, _no_serve, _no_serve)

@@ -1,0 +1,28 @@
+"""Security stack (paper Algorithm 2): QKD-keyed OTP/AEAD for model exchange.
+
+In-graph (jit-compatible, used inside training steps around collectives):
+  * ``otp``  — XOR one-time-pad encryption of parameter pytrees, pads
+    expanded from QKD-derived seeds by the threefry PRF
+  * ``mac``  — polynomial MAC over the ciphertext words (integrity),
+    Carter–Wegman style over GF(2^31 − 1)
+
+Host-side (control plane):
+  * ``fernet_lite`` — Fernet-structured token AEAD for metadata/key-exchange
+    messages (SHA-256-CTR + HMAC; the offline stand-in for AES-128 Fernet)
+  * ``keys`` — per-edge, per-round key schedule driven by simulated BB84
+"""
+from repro.security.otp import (
+    encrypt_tree, decrypt_tree, encrypt_flat_u32, pad_u32,
+    tree_to_u32, u32_to_tree,
+)
+from repro.security.mac import poly_mac_u32, mac_verify, P31
+from repro.security.keys import KeyManager, EdgeKey
+from repro.security.fernet_lite import fernet_encrypt, fernet_decrypt
+
+__all__ = [
+    "encrypt_tree", "decrypt_tree", "encrypt_flat_u32", "pad_u32",
+    "tree_to_u32", "u32_to_tree",
+    "poly_mac_u32", "mac_verify", "P31",
+    "KeyManager", "EdgeKey",
+    "fernet_encrypt", "fernet_decrypt",
+]

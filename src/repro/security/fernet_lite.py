@@ -1,0 +1,74 @@
+"""Fernet-structured token AEAD for the control plane (host-side).
+
+The paper's QFL-QKD-Fernet mode encrypts with Fernet (AES-128-CBC + HMAC).
+This offline stand-in keeps Fernet's token structure —
+
+    version(1) | timestamp(8) | IV(16) | ciphertext | HMAC-SHA256(32)
+
+— with a SHA-256 counter-mode keystream replacing AES (no third-party
+crypto libs in this container; hashlib only). Encrypt-then-MAC over the
+full header+ciphertext, constant-time verification, TTL support. Used for
+metadata / key-agreement messages; bulk tensors use the in-graph OTP path.
+"""
+from __future__ import annotations
+
+import hashlib
+import hmac
+import os
+import struct
+import time
+
+VERSION = 0x80
+
+
+def _keystream(key: bytes, iv: bytes, n: int) -> bytes:
+    out = bytearray()
+    counter = 0
+    while len(out) < n:
+        block = hashlib.sha256(key + iv + struct.pack(">Q", counter)).digest()
+        out.extend(block)
+        counter += 1
+    return bytes(out[:n])
+
+
+def _split_key(key: bytes):
+    """Fernet splits its 32-byte key into signing + encryption halves."""
+    if len(key) != 32:
+        key = hashlib.sha256(key).digest()
+    return key[:16], key[16:]
+
+
+def fernet_encrypt(key: bytes, plaintext: bytes, *, now: float | None = None,
+                   iv: bytes | None = None) -> bytes:
+    sign_key, enc_key = _split_key(key)
+    ts = struct.pack(">Q", int(now if now is not None else time.time()))
+    iv = iv if iv is not None else os.urandom(16)
+    stream = _keystream(enc_key, iv, len(plaintext))
+    ct = bytes(a ^ b for a, b in zip(plaintext, stream))
+    body = bytes([VERSION]) + ts + iv + ct
+    tag = hmac.new(sign_key, body, hashlib.sha256).digest()
+    return body + tag
+
+
+class InvalidToken(Exception):
+    pass
+
+
+def fernet_decrypt(key: bytes, token: bytes, *, ttl: float | None = None,
+                   now: float | None = None) -> bytes:
+    sign_key, enc_key = _split_key(key)
+    if len(token) < 1 + 8 + 16 + 32 or token[0] != VERSION:
+        raise InvalidToken("malformed token")
+    body, tag = token[:-32], token[-32:]
+    expect = hmac.new(sign_key, body, hashlib.sha256).digest()
+    if not hmac.compare_digest(tag, expect):
+        raise InvalidToken("MAC mismatch")
+    ts = struct.unpack(">Q", body[1:9])[0]
+    if ttl is not None:
+        t = now if now is not None else time.time()
+        if t - ts > ttl:
+            raise InvalidToken("token expired")
+    iv = body[9:25]
+    ct = body[25:]
+    stream = _keystream(enc_key, iv, len(ct))
+    return bytes(a ^ b for a, b in zip(ct, stream))

@@ -1,0 +1,82 @@
+"""Per-edge, per-round key schedule driven by (simulated) BB84.
+
+Every communicating pair (edge) in the sat-QFL hierarchy — secondary↔primary
+ISLs and primary↔ground feeder links — establishes a key via BB84 once per
+key epoch; per-round pads/MAC keys are derived by folding the round index
+into the edge seed (fresh pad every round — OTP keys never reuse).
+
+An edge whose QBER exceeds the abort threshold (eavesdropping detected,
+paper §III-B) is marked compromised and its satellite drops from the
+participating set C(t) until re-keyed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quantum.qkd import bb84_keygen, derive_pad_seed
+
+QBER_ABORT = 0.11   # standard BB84 abort threshold
+
+
+@dataclass
+class EdgeKey:
+    edge: tuple
+    seed: int                 # 32-bit QKD-derived seed
+    qber: float
+    compromised: bool
+
+    def round_seed(self, round_idx: int) -> jnp.ndarray:
+        mix = ((self.seed * 2654435761) ^ (round_idx * 0x9E3779B9)) & 0xFFFFFFFF
+        return jnp.uint32(mix)
+
+    def mac_keys(self, round_idx: int):
+        base = int(self.round_seed(round_idx))
+        r = np.uint32(base ^ 0xA5A5A5A5)
+        s = np.uint32((base * 747796405 + 2891336453) & 0xFFFFFFFF)
+        return jnp.uint32(r), jnp.uint32(s)
+
+
+class KeyManager:
+    """Host-side registry of QKD-established edge keys."""
+
+    def __init__(self, master_key: jax.Array, n_qkd_bits: int = 512,
+                 eavesdrop_edges: frozenset = frozenset()):
+        self.master_key = master_key
+        self.n_qkd_bits = n_qkd_bits
+        self.eavesdrop_edges = eavesdrop_edges
+        self._edges: dict[tuple, EdgeKey] = {}
+
+    def establish(self, edge: tuple) -> EdgeKey:
+        """Run BB84 for an edge (a, b); idempotent per epoch. Edge endpoints
+        may be ints (satellites) or strings (ground stations)."""
+        edge = tuple(sorted(edge, key=str))
+        if edge in self._edges:
+            return self._edges[edge]
+        sub = jax.random.fold_in(self.master_key, hash(edge) & 0x7FFFFFFF)
+        res = bb84_keygen(sub, self.n_qkd_bits,
+                          eavesdrop=edge in self.eavesdrop_edges)
+        seed = int(derive_pad_seed(res.sifted_key, res.key_len))
+        qber = float(res.qber)
+        ek = EdgeKey(edge=edge, seed=seed, qber=qber,
+                     compromised=qber > QBER_ABORT)
+        self._edges[edge] = ek
+        return ek
+
+    def get(self, edge: tuple) -> EdgeKey:
+        return self.establish(edge)
+
+    def compromised_nodes(self) -> set:
+        out = set()
+        for ek in self._edges.values():
+            if ek.compromised:
+                out.update(ek.edge)
+        return out
+
+    def rekey(self, edge: tuple) -> EdgeKey:
+        self._edges.pop(tuple(sorted(edge)), None)
+        return self.establish(edge)

@@ -1,0 +1,107 @@
+"""In-graph OTP (x ⊕ K) over parameter pytrees — paper Algorithm 2 step 4.
+
+Every leaf is bitcast to unsigned words, XORed with a pad stream generated
+by the threefry PRF from a QKD-derived seed (see ``repro.quantum.qkd`` and
+DESIGN.md §3 on the OTP→PRF-expansion compromise, identical in kind to the
+paper's QKD+Fernet mode). Decryption is the same XOR — involution.
+
+The per-leaf pad key is ``fold_in(seed_key, leaf_index)`` so the stream
+never repeats across leaves; the per-round key is folded in by the caller
+(KeyManager), so pads never repeat across rounds either.
+
+The flat-u32 path (``encrypt_flat_u32``) is the hot bulk path; its Pallas
+fused XOR+MAC kernel lives in ``repro.kernels.otp_xor``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BITCAST = {
+    jnp.dtype(jnp.float32): jnp.uint32,
+    jnp.dtype(jnp.bfloat16): jnp.uint16,
+    jnp.dtype(jnp.float16): jnp.uint16,
+    jnp.dtype(jnp.int32): jnp.uint32,
+    jnp.dtype(jnp.uint32): jnp.uint32,
+    jnp.dtype(jnp.int16): jnp.uint16,
+    jnp.dtype(jnp.uint16): jnp.uint16,
+}
+
+
+def _seed_to_key(seed_u32) -> jax.Array:
+    return jax.random.key(seed_u32.astype(jnp.uint32))
+
+
+def pad_u32(seed_u32, n: int) -> jax.Array:
+    """n uint32 pad words from a 32-bit seed (threefry PRF expansion)."""
+    return jax.random.bits(_seed_to_key(seed_u32), (n,), jnp.uint32)
+
+
+def _xor_leaf(leaf: jax.Array, key) -> jax.Array:
+    udtype = _BITCAST[jnp.dtype(leaf.dtype)]
+    u = jax.lax.bitcast_convert_type(leaf, udtype)
+    pad = jax.random.bits(key, u.shape, udtype)
+    return jax.lax.bitcast_convert_type(u ^ pad, leaf.dtype)
+
+
+def encrypt_tree(tree, seed_u32):
+    """OTP-encrypt every leaf of a pytree. Involution: decrypt == encrypt."""
+    base = _seed_to_key(seed_u32)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = [
+        _xor_leaf(leaf, jax.random.fold_in(base, i))
+        for i, leaf in enumerate(leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decrypt_tree(tree, seed_u32):
+    return encrypt_tree(tree, seed_u32)   # XOR is an involution
+
+
+def encrypt_flat_u32(msg_u32: jax.Array, seed_u32) -> jax.Array:
+    """Bulk path: ciphertext = msg ⊕ pad for a flat uint32 stream."""
+    return msg_u32 ^ pad_u32(seed_u32, msg_u32.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat u32 view (for MAC computation / wire format)
+# ---------------------------------------------------------------------------
+
+def tree_to_u32(tree) -> jax.Array:
+    """Concatenate all leaves as a flat uint32 stream (u16 leaves pack 2:1;
+    odd-length u16 leaves are padded with a zero half-word)."""
+    words = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        udtype = _BITCAST[jnp.dtype(leaf.dtype)]
+        u = jax.lax.bitcast_convert_type(leaf, udtype).reshape(-1)
+        if udtype == jnp.uint16:
+            if u.shape[0] % 2:
+                u = jnp.concatenate([u, jnp.zeros((1,), jnp.uint16)])
+            half = u.reshape(-1, 2).astype(jnp.uint32)
+            u = half[:, 0] | (half[:, 1] << 16)
+        words.append(u.astype(jnp.uint32))
+    return jnp.concatenate(words) if words else jnp.zeros((0,), jnp.uint32)
+
+
+def u32_to_tree(vec: jax.Array, like):
+    """Inverse of tree_to_u32 given a structural template."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        udtype = _BITCAST[jnp.dtype(leaf.dtype)]
+        n = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        if udtype == jnp.uint16:
+            n_words = (n + 1) // 2
+            w = vec[off:off + n_words]
+            lo = (w & 0xFFFF).astype(jnp.uint16)
+            hi = (w >> 16).astype(jnp.uint16)
+            u = jnp.stack([lo, hi], axis=1).reshape(-1)[:n]
+            off += n_words
+        else:
+            u = vec[off:off + n].astype(jnp.uint32)
+            off += n
+        out.append(jax.lax.bitcast_convert_type(
+            u.reshape(leaf.shape), leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

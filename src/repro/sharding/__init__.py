@@ -1,0 +1,4 @@
+from repro.sharding.context import DistCtx
+from repro.sharding.specs import param_specs, batch_specs, cache_specs
+
+__all__ = ["DistCtx", "param_specs", "batch_specs", "cache_specs"]

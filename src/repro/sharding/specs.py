@@ -1,0 +1,200 @@
+"""PartitionSpec rules for every architecture's parameter/batch/cache trees.
+
+Name-based rules assigned from the *trailing* dims of each leaf (leading
+stack axes — layers, or (groups, selfs) for the VLM — get None), guarded by
+divisibility checks so small models (whisper 6 heads, mamba2 24 SSD heads,
+hymba 25 heads) gracefully degrade to replication instead of invalid
+shardings. See DESIGN.md §Arch-applicability for which archs replicate what.
+
+Strategy knobs live on DistCtx:
+  * tensor parallelism over "model" (attention heads / ffn hidden / experts
+    / vocab)
+  * optional FSDP over the data axes (ctx.fsdp) — shards the largest
+    remaining dim of the big matrices (§Perf hillclimb lever)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.sharding.context import DistCtx
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _leaf_spec(cfg: ArchConfig, ctx: DistCtx, path: tuple, leaf) -> P:
+    """(axis for dim -2, axis for dim -1) padded with leading Nones."""
+    name = None
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            name = entry.key
+            break
+    ms = ctx.model_size
+    nd = leaf.ndim
+    d2 = d1 = None        # shardings for dims -2 / -1
+
+    if ctx.strategy == "dp":
+        # pure data-parallel + full FSDP: every big matrix shards one dim
+        # over ALL mesh axes; no tensor parallelism at all
+        spec = [None] * nd
+        if nd >= 1 and leaf.size >= 1 << 16:
+            total = ctx.data_size * ms
+            if nd >= 2 and _div(leaf.shape[-1], total):
+                spec[-1] = ctx.all_axes
+            elif nd >= 2 and _div(leaf.shape[-2], total):
+                spec[-2] = ctx.all_axes
+            elif _div(leaf.shape[-1], ms):
+                spec[-1] = "model"
+        return P(*spec)
+
+    H_ok = _div(cfg.n_heads, ms)
+    KV_ok = _div(cfg.n_kv_heads, ms)
+    FF_ok = _div(cfg.d_ff, ms) if cfg.d_ff else False
+    V_ok = _div(cfg.padded_vocab, ms)
+    E_ok = _div(cfg.n_experts, ms) if cfg.n_experts else False
+    MOEFF_ok = _div(cfg.moe_d_ff, ms) if cfg.moe_d_ff else False
+
+    if name in ("wq",):
+        d1 = "model" if H_ok else None
+    elif name in ("wk", "wv"):
+        d1 = "model" if KV_ok else None
+    elif name == "wo" and nd >= 2:
+        # attention out-proj (H*hd, d) — also the SSM out-proj (d_inner, d)
+        is_ssm = any(getattr(e, "key", None) == "ssm" for e in path)
+        if is_ssm:
+            d2 = "model" if _div(cfg.ssm_nheads, ms) else None
+        else:
+            d2 = "model" if H_ok else None
+    elif name in ("wg", "wu"):
+        d1 = "model" if _div(leaf.shape[-1], ms) else None
+    elif name == "wd":
+        d2 = "model" if _div(leaf.shape[-2], ms) else None
+    elif name in ("wi",):                      # whisper gelu mlp in
+        d1 = "model" if FF_ok else None
+    elif name in ("we_g", "we_u", "we_d"):     # experts (L, E, d, f)
+        # expert parallelism: shard the E dim (dim -3)
+        spec = [None] * nd
+        if E_ok:
+            spec[nd - 3] = "model"
+        elif MOEFF_ok:
+            spec[nd - 1 if name != "we_d" else nd - 2] = "model"
+        return P(*spec)
+    elif name == "embed":
+        d2 = "model" if V_ok else None         # (Vp, d) vocab rows
+    elif name == "lm_head":
+        d1 = "model" if V_ok else None         # (d, Vp)
+    elif name in ("wx", "wz"):                 # ssm in-projections (d, d_inner)
+        d1 = "model" if _div(cfg.ssm_nheads, ms) else None
+    elif name in ("wB", "wC", "wdt", "router", "conv_w", "conv_b", "dt_bias",
+                  "A_log", "D", "gnorm", "q_norm", "k_norm", "ln1", "ln2",
+                  "lnx", "s", "b", "bq", "bv", "bo", "bi", "pos_embed",
+                  "final_norm", "enc_final_ln", "dec_final_ln", "bn_attn",
+                  "bn_ssm", "gate_attn", "gate_ffn", "theta", "phi",
+                  "w_out", "b_out"):
+        pass                                    # replicated
+    # FSDP: shard the other matrix dim over the data axes
+    if ctx.fsdp and nd >= 2 and leaf.size >= 1 << 20:
+        dp = ctx.data_spec_axes
+        dp_n = ctx.data_size
+        if d2 is None and _div(leaf.shape[-2], dp_n):
+            d2 = dp
+        elif d1 is None and _div(leaf.shape[-1], dp_n):
+            d1 = dp
+    spec = [None] * nd
+    if nd >= 2:
+        spec[-2], spec[-1] = d2, d1
+    elif nd == 1:
+        spec[-1] = d1
+    return P(*spec)
+
+
+def param_specs(cfg: ArchConfig, params, ctx: DistCtx):
+    """Pytree of PartitionSpec matching `params`."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(cfg, ctx, path, leaf), params)
+
+
+def batch_specs(cfg: ArchConfig, batch, ctx: DistCtx):
+    """Batch-dim sharding over the data axes (works for train and decode).
+    Under the "dp" strategy the batch shards over EVERY mesh axis."""
+    dp = ctx.data_spec_axes
+    dp_n = ctx.data_size
+    total = dp_n * ctx.model_size
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        if ctx.strategy == "dp" and _div(leaf.shape[0], total):
+            return P(*([ctx.all_axes] + [None] * (leaf.ndim - 1)))
+        if _div(leaf.shape[0], dp_n):
+            return P(*([dp] + [None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_specs(cfg: ArchConfig, cache, ctx: DistCtx):
+    """Serve-cache sharding.
+
+    Preference order per attention-cache leaf (L, B, Sc, KV, hd):
+      1. shard batch over data axes (decode_32k: B=128)
+      2. else shard the context length Sc over data axes (long_500k: B=1 —
+         sequence parallelism over the KV cache)
+    KV heads shard over "model" when divisible. SSM states shard batch only.
+    """
+    dp = ctx.data_spec_axes
+    dp_n = ctx.data_size
+    ms = ctx.model_size
+    KV_ok = _div(cfg.n_kv_heads, ms)
+
+    def spec(path, leaf):
+        names = [getattr(e, "key", None) for e in path]
+        nd = leaf.ndim
+        s = [None] * nd
+        if "k" in names or "v" in names:
+            # (L?, B, Sc, KV, hd) or cross (L?, B, Skv, KV, hd)
+            b_dim = nd - 4
+            sc_dim = nd - 3
+            kv_dim = nd - 2
+            if _div(leaf.shape[b_dim], dp_n):
+                s[b_dim] = dp
+            elif _div(leaf.shape[sc_dim], dp_n):
+                s[sc_dim] = dp
+            if KV_ok:
+                s[kv_dim] = "model"
+            return P(*s)
+        if "pos" in names:
+            # (L?, B, Sc)
+            b_dim = nd - 2
+            sc_dim = nd - 1
+            if _div(leaf.shape[b_dim], dp_n):
+                s[b_dim] = dp
+            elif _div(leaf.shape[sc_dim], dp_n):
+                s[sc_dim] = dp
+            return P(*s)
+        if "state" in names:
+            # (L, B, nh, hd, N)
+            b_dim = nd - 4
+            if _div(leaf.shape[b_dim], dp_n):
+                s[b_dim] = dp
+            if _div(cfg.ssm_nheads, ms):
+                s[nd - 3] = "model"
+            return P(*s)
+        if "conv" in names:
+            b_dim = nd - 3
+            if _div(leaf.shape[b_dim], dp_n):
+                s[b_dim] = dp
+            return P(*s)
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def to_named(tree_of_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; only launch/dryrun.py sets the 512-device flag (in its
+own process)."""
+import os
+
+# keep hypothesis + jax deterministic and CPU-friendly
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+from hypothesis import settings, HealthCheck
+
+settings.register_profile(
+    "ci", max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,103 @@
+"""Checkpoint round-trips + the HLO collective-parser unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, \
+    save_checkpoint, latest_step
+from repro.checkpoint.io import CheckpointCorrupt
+from repro.launch.analysis import collective_bytes, _shape_bytes
+
+
+def _tree(key):
+    return {
+        "w": jax.random.normal(key, (8, 16)).astype(jnp.bfloat16),
+        "b": jax.random.normal(key, (16,)),
+        "step": jnp.asarray(7, jnp.int32),
+        "nested": {"m": jax.random.normal(key, (3, 3, 3))},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path, rng_key):
+    tree = _tree(rng_key)
+    save_checkpoint(str(tmp_path), 42, tree, {"note": "hello"})
+    out, step, meta = load_checkpoint(str(tmp_path), tree)
+    assert step == 42 and meta["note"] == "hello"
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype
+        assert bool(jnp.all(a == b))
+
+
+def test_checkpoint_corruption_detected(tmp_path, rng_key):
+    tree = _tree(rng_key)
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    blob = bytearray(open(path, "rb").read())
+    blob[-100] ^= 0xFF                     # flip a payload byte
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises((CheckpointCorrupt, Exception)):
+        load_checkpoint(str(tmp_path), tree)
+
+
+def test_checkpoint_manager_keeps_last_n(tmp_path, rng_key):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree(rng_key)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.latest == 4
+    out, step, _ = mgr.restore(tree)
+    assert step == 4
+    assert latest_step(str(tmp_path)) == 4
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path) + "/nope", tree)
+
+
+def test_checkpoint_shape_mismatch(tmp_path, rng_key):
+    tree = _tree(rng_key)
+    save_checkpoint(str(tmp_path), 5, tree)
+    bad = dict(tree, w=jnp.zeros((4, 4), jnp.bfloat16))
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), bad)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+
+FAKE_HLO = """\
+HloModule jit_step, entry_computation_layout={()->f32[]}
+
+%loop_body (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  %ag = (f32[16,128]{1,0}, f32[16,128]{1,0}) all-gather-start(%y), dimensions={0}
+  ROOT %t = (s32[], f32[16,128]) tuple(%i, %ar)
+}
+
+%loop_cond (p: (s32[], f32[16,128])) -> pred[] {
+  %c = s32[] constant(22)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[16,128]) -> f32[] {
+  %w = (s32[], f32[16,128]) while(%init), condition=%loop_cond, body=%loop_body, backend_config={"known_trip_count":{"n":"22"}}
+  %a2a = f32[4,32,128]{2,1,0} all-to-all(%z), dimensions={0}
+  ROOT %r = f32[] constant(0)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("(bf16[8,8], f32[4])") == 8 * 8 * 2 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_parser_expands_trips():
+    out = collective_bytes(FAKE_HLO)
+    per_iter = 16 * 128 * 4
+    assert out["all-reduce"] == 22 * per_iter
+    # all-gather-start result is a (in, out) tuple: 2 buffers
+    assert out["all-gather"] == 22 * 2 * per_iter
+    assert out["all-to-all"] == 4 * 32 * 128 * 4
+    assert out["count"] == 22 * 2 + 1

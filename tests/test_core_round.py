@@ -1,0 +1,91 @@
+"""Host-level sat-QFL trainer (paper Algorithm 1 + 2) behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constellation import build_trace
+from repro.core import CommModel, SatQFLConfig, SatQFLTrainer
+from repro.data import dirichlet_partition, make_statlog, server_split
+from repro.models import get_config, get_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("vqc-satqfl").replace(vqc_qubits=4, vqc_layers=1,
+                                           n_features=4)
+    api = get_model(cfg)
+    X, y = make_statlog(n_features=4)
+    Xc, yc, server = server_split(X, y)
+    trace = build_trace(n_sats=12, n_planes=4, duration_s=1800, step_s=60)
+    sats = dirichlet_partition(Xc, yc, 12)
+    return cfg, api, trace, sats, server
+
+
+def _run(setup, **kw):
+    cfg, api, trace, sats, server = setup
+    fl = SatQFLConfig(n_rounds=2, local_steps=3, batch_size=8, **kw)
+    tr = SatQFLTrainer(cfg, api, fl, trace, sats, server)
+    hist = tr.run()
+    return tr, hist
+
+
+@pytest.mark.parametrize("mode", ["qfl", "sim", "seq", "async"])
+def test_modes_run_and_evaluate(setup, mode):
+    tr, hist = _run(setup, mode=mode)
+    assert len(hist) == 2
+    for m in hist:
+        assert np.isfinite(m.server_val_loss)
+        assert 0.0 <= m.server_val_acc <= 1.0
+        assert m.comm_s > 0
+
+
+def test_encryption_transparent(setup):
+    t1, _ = _run(setup, mode="sim", security="none")
+    t2, _ = _run(setup, mode="sim", security="qkd")
+    for a, b in zip(jax.tree_util.tree_leaves(t1.global_params),
+                    jax.tree_util.tree_leaves(t2.global_params)):
+        assert bool(jnp.all(a == b))
+
+
+def test_security_adds_overhead(setup):
+    t1, h1 = _run(setup, mode="sim", security="none")
+    t2, h2 = _run(setup, mode="sim", security="qkd")
+    assert t2.log.security_s > t1.log.security_s
+
+
+def test_teleport_fidelity_reported(setup):
+    _, hist = _run(setup, mode="sim", security="teleport")
+    assert hist[-1].teleport_fidelity > 0.999
+
+
+def test_qfl_baseline_fastest_comm(setup):
+    """Paper Fig.12: flat QFL beats the hierarchical schedules on comm time
+    (it ignores constellation constraints)."""
+    _, h_qfl = _run(setup, mode="qfl")
+    _, h_seq = _run(setup, mode="seq")
+    _, h_sim = _run(setup, mode="sim")
+    c = lambda h: sum(m.comm_s for m in h)
+    assert c(h_qfl) < c(h_seq)
+    assert c(h_qfl) < c(h_sim)
+
+
+def test_async_staleness_buffer(setup):
+    cfg, api, trace, sats, server = setup
+    fl = SatQFLConfig(mode="async", n_rounds=3, local_steps=2, batch_size=8,
+                      max_staleness=0)
+    tr = SatQFLTrainer(cfg, api, fl, trace, sats, server)
+    hist = tr.run()
+    assert all(np.isfinite(m.server_val_loss) for m in hist)
+
+
+def test_compromised_edge_aborts(setup):
+    cfg, api, trace, sats, server = setup
+    fl = SatQFLConfig(mode="sim", n_rounds=1, local_steps=2, batch_size=8,
+                      security="qkd")
+    # eavesdrop on every ISL edge: exchanges must abort
+    eav = frozenset((s, m) for s in range(12) for m in range(12))
+    tr = SatQFLTrainer(cfg, api, fl, trace, sats, server,
+                       eavesdrop_edges=eav)
+    with pytest.raises(ConnectionAbortedError):
+        tr.run_round(0)

@@ -1,0 +1,76 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family (2 layers, d_model<=512, <=4 experts) runs one forward and
+one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import get_config, get_model, smoke_variant
+from repro.models.registry import ARCH_IDS
+from repro.nn.optim import sgd
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "vqc-satqfl"]
+
+
+def _batch(cfg, key, B=2, S=16):
+    b = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        b["audio_embeds"] = 0.1 * jax.random.normal(
+            key, (B, cfg.n_audio_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        b["image_embeds"] = 0.1 * jax.random.normal(
+            key, (B, cfg.n_image_tokens, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_forward_shapes_and_finite(arch, rng_key):
+    cfg = smoke_variant(get_config(arch))
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    api = get_model(cfg)
+    params = api.init(cfg, rng_key)
+    batch = _batch(cfg, jax.random.fold_in(rng_key, 1))
+    logits, aux = api.forward(cfg, params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_train_step(arch, rng_key):
+    cfg = smoke_variant(get_config(arch))
+    api = get_model(cfg)
+    params = api.init(cfg, rng_key)
+    opt = sgd(1e-2)
+    state = opt.init(params)
+    batch = _batch(cfg, jax.random.fold_in(rng_key, 2))
+
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss(cfg, p, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    for g in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+    new_params, _ = opt.update(grads, state, params, jnp.zeros((), jnp.int32))
+    # parameters actually moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree_util.tree_leaves(new_params),
+                        jax.tree_util.tree_leaves(params)))
+    assert moved
+
+
+def test_vqc_smoke(rng_key):
+    cfg = get_config("vqc-satqfl").replace(vqc_qubits=4, vqc_layers=2,
+                                           n_features=4)
+    api = get_model(cfg)
+    params = api.init(cfg, rng_key)
+    batch = {"features": jax.random.uniform(rng_key, (8, 4), maxval=3.14),
+             "labels": jax.random.randint(rng_key, (8,), 0, cfg.n_classes)}
+    loss = api.loss(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda p: api.loss(cfg, p, batch))(params)
+    assert bool(jnp.all(jnp.isfinite(g["theta"])))

@@ -1,0 +1,128 @@
+"""NN substrate: layers, losses, optimizers, schedules, pytree utils."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.nn import (
+    adamw, apply_rope, cosine_schedule, inv_sqrt_schedule, layer_norm,
+    momentum, rms_norm, rope_angles, sgd, softmax_cross_entropy,
+    tree_flatten_to_vector, tree_unflatten_from_vector, tree_weighted_sum,
+)
+from repro.nn.common import swiglu
+
+
+def test_rms_norm_unit_rms():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 5
+    y = rms_norm(x)
+    rms = jnp.sqrt(jnp.mean(y ** 2, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+def test_layer_norm_zero_mean_unit_var():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 3 + 7
+    y = layer_norm(x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(jnp.var(y, -1)), 1.0, rtol=1e-2)
+
+
+def test_rope_preserves_norm_and_relativity():
+    B, S, H, hd = 1, 8, 2, 16
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (B, S, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cos, sin = rope_angles(pos, hd, 10000.0)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jax.random.normal(jax.random.fold_in(key, 2), (hd,))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (hd,))
+
+    def dot_at(p0, p1):
+        c0, s0 = rope_angles(jnp.asarray([p0]), hd, 10000.0)
+        c1, s1 = rope_angles(jnp.asarray([p1]), hd, 10000.0)
+        qq = apply_rope(q[None, None, None], c0[:, None], s0[:, None]).reshape(-1)
+        vv = apply_rope(v[None, None, None], c1[:, None], s1[:, None]).reshape(-1)
+        return float(jnp.dot(qq, vv))
+
+    assert abs(dot_at(3, 7) - dot_at(10, 14)) < 1e-3
+
+
+def test_cross_entropy_matches_naive():
+    key = jax.random.PRNGKey(2)
+    logits = jax.random.normal(key, (4, 6, 16))
+    labels = jax.random.randint(key, (4, 6), 0, 16)
+    got = softmax_cross_entropy(logits, labels)
+    logp = jax.nn.log_softmax(logits, -1)
+    want = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], -1))
+    assert abs(float(got) - float(want)) < 1e-5
+
+
+def test_cross_entropy_mask():
+    logits = jnp.zeros((1, 4, 8))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    m = jnp.asarray([[1.0, 1.0, 0.0, 0.0]])
+    got = softmax_cross_entropy(logits, labels, m)
+    assert abs(float(got) - float(jnp.log(8.0))) < 1e-5
+
+
+@pytest.mark.parametrize("opt_fn", [sgd, momentum, adamw])
+def test_optimizers_reduce_quadratic(opt_fn):
+    opt = opt_fn(0.1)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for i in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(g, state, params, jnp.asarray(i))
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.2
+
+
+def test_sgd_bf16_params_update():
+    opt = sgd(0.5)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new, _ = opt.update(g, opt.init(params), params, jnp.asarray(0))
+    assert new["w"].dtype == jnp.bfloat16
+    assert float(new["w"][0]) == pytest.approx(0.5, abs=0.01)
+
+
+def test_inv_sqrt_schedule():
+    s = inv_sqrt_schedule(1.0)
+    assert float(s(jnp.asarray(1))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(100))) == pytest.approx(0.1)
+
+
+def test_cosine_schedule_monotone_tail():
+    s = cosine_schedule(1.0, 100, warmup=10)
+    vals = [float(s(jnp.asarray(i))) for i in range(0, 100, 10)]
+    assert vals[1] >= vals[5] >= vals[-1]
+
+
+@given(st.lists(st.integers(1, 5), min_size=1, max_size=4))
+def test_tree_vector_roundtrip(dims):
+    key = jax.random.PRNGKey(sum(dims))
+    tree = {f"p{i}": jax.random.normal(jax.random.fold_in(key, i), (d, d + 1))
+            for i, d in enumerate(dims)}
+    vec = tree_flatten_to_vector(tree)
+    back = tree_unflatten_from_vector(vec, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_tree_weighted_sum_convexity():
+    a = {"w": jnp.asarray([1.0, 2.0])}
+    b = {"w": jnp.asarray([3.0, 6.0])}
+    out = tree_weighted_sum([a, b], [0.25, 0.75])
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.5, 5.0])
+
+
+def test_swiglu_shapes():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 8))
+    wg = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+    wu = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+    wd = jax.random.normal(jax.random.PRNGKey(3), (16, 8))
+    assert swiglu(x, wg, wu, wd).shape == (2, 3, 8)

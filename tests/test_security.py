@@ -1,0 +1,120 @@
+"""Security layer: OTP involution, MAC soundness (vs python-int oracle),
+fernet-lite AEAD, QKD key schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.security import (
+    KeyManager, decrypt_tree, encrypt_tree, fernet_decrypt, fernet_encrypt,
+    mac_verify, poly_mac_u32, tree_to_u32, u32_to_tree,
+)
+from repro.security.fernet_lite import InvalidToken
+from repro.security.mac import mulmod, addmod
+
+P = 2**31 - 1
+
+
+@given(st.integers(0, P - 1), st.integers(0, P - 1))
+def test_mulmod_exact(a, b):
+    got = int(mulmod(jnp.uint32(a), jnp.uint32(b)))
+    assert got == (a * b) % P
+
+
+@given(st.integers(0, P - 1), st.integers(0, P - 1))
+def test_addmod_exact(a, b):
+    assert int(addmod(jnp.uint32(a), jnp.uint32(b))) == (a + b) % P
+
+
+def _tree(key):
+    return {
+        "a": jax.random.normal(key, (33,), jnp.float32),
+        "b": jax.random.normal(key, (5, 7)).astype(jnp.bfloat16),
+        "c": {"d": jax.random.normal(key, (3,), jnp.float32)},
+    }
+
+
+def test_otp_involution_and_diffusion(rng_key):
+    tree = _tree(rng_key)
+    enc = encrypt_tree(tree, jnp.uint32(99))
+    dec = decrypt_tree(enc, jnp.uint32(99))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(dec)):
+        assert bool(jnp.all(a == b))
+    # ciphertext must differ and differ per key
+    enc2 = encrypt_tree(tree, jnp.uint32(100))
+    assert bool(jnp.any(enc["a"] != tree["a"]))
+    assert bool(jnp.any(enc["a"] != enc2["a"]))
+
+
+def test_wrong_key_garbles(rng_key):
+    tree = _tree(rng_key)
+    dec = decrypt_tree(encrypt_tree(tree, jnp.uint32(1)), jnp.uint32(2))
+    assert bool(jnp.any(dec["a"] != tree["a"]))
+
+
+def test_u32_view_roundtrip(rng_key):
+    tree = _tree(rng_key)
+    flat = tree_to_u32(tree)
+    back = u32_to_tree(flat, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert bool(jnp.all(a == b))
+
+
+def test_mac_python_oracle():
+    rng = np.random.default_rng(0)
+    msg = rng.integers(0, 2**32, 257, dtype=np.uint32)
+    r_key, s_key = 777, 888
+    tag = int(poly_mac_u32(jnp.asarray(msg), jnp.uint32(r_key),
+                           jnp.uint32(s_key)))
+    # independent python-int implementation
+    r = (r_key % P) | 1
+    s = s_key % P
+    syms = []
+    for w in msg.tolist():
+        syms += [(w & 0xFFFF) + 1, (w >> 16) + 1]
+    n = len(syms)
+    acc = 0
+    for i, m in enumerate(syms):
+        acc = (acc + m * pow(r, n - i, P)) % P
+    expect = (acc + (n % P) * s) % P
+    assert tag == expect
+
+
+@given(st.integers(0, 256 * 2 - 1), st.integers(0, 31))
+def test_mac_detects_single_bitflip(pos, bit):
+    msg = jax.random.bits(jax.random.key(7), (256,), jnp.uint32)
+    r, s = jnp.uint32(123), jnp.uint32(456)
+    tag = poly_mac_u32(msg, r, s)
+    i = pos % 256
+    tampered = msg.at[i].set(msg[i] ^ (1 << bit))
+    assert not bool(mac_verify(tampered, tag, r, s))
+
+
+def test_fernet_roundtrip_and_ttl():
+    key = b"0" * 32
+    tok = fernet_encrypt(key, b"telemetry", now=1000.0)
+    assert fernet_decrypt(key, tok, now=1001.0) == b"telemetry"
+    with pytest.raises(InvalidToken):
+        fernet_decrypt(key, tok, ttl=5.0, now=2000.0)
+    with pytest.raises(InvalidToken):
+        bad = tok[:-1] + bytes([tok[-1] ^ 1])
+        fernet_decrypt(key, bad)
+    with pytest.raises(InvalidToken):
+        fernet_decrypt(b"1" * 32, tok)
+
+
+def test_key_manager_qber_gating(rng_key):
+    km = KeyManager(rng_key, eavesdrop_edges=frozenset({(1, 2)}))
+    clean = km.establish((3, 4))
+    attacked = km.establish((1, 2))
+    assert not clean.compromised
+    assert attacked.compromised
+    assert 1 in km.compromised_nodes() and 2 in km.compromised_nodes()
+    # per-round seeds differ
+    assert int(clean.round_seed(0)) != int(clean.round_seed(1))
+    # rekey regenerates
+    km2 = km.rekey((3, 4))
+    assert km2.edge == (3, 4)

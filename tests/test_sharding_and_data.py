@@ -1,0 +1,122 @@
+"""Sharding-spec properties (every spec divides its dims) + data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (
+    dirichlet_partition, equal_partition, lm_batches, make_eurosat,
+    make_statlog, server_split, synthetic_corpus,
+)
+from repro.models import get_config, get_model
+from repro.models.registry import ARCH_IDS
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.context import DistCtx
+from repro.sharding.specs import batch_specs, cache_specs, param_specs
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "vqc-satqfl"]
+
+
+class _FakeMesh:
+    """Stand-in with the production shape (no jax devices needed)."""
+    shape = {"data": 16, "model": 16}
+    axis_names = ("data", "model")
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_param_specs_divisible(arch):
+    """Property: every sharded dim must be divisible by its axis size —
+    an invalid spec would fail at lower time on the real mesh."""
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    p_abs = jax.eval_shape(lambda: api.init(cfg, jax.random.PRNGKey(0)))
+    ctx = DistCtx(mesh=_FakeMesh(), data_axes=("data",), fsdp=True)
+    specs = param_specs(cfg, p_abs, ctx)
+
+    def check(path, leaf, spec):
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = 1
+            for a in axes:
+                size *= _FakeMesh.shape[a]
+            assert dim % size == 0, (arch, path, leaf.shape, tuple(spec))
+
+    flat_p = jax.tree_util.tree_leaves_with_path(p_abs)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        check(path, leaf, spec)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-130m",
+                                  "whisper-tiny"])
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    c_abs = jax.eval_shape(lambda: api.init_cache(cfg, 128, 1024))
+    ctx = DistCtx(mesh=_FakeMesh(), data_axes=("data",))
+    specs = cache_specs(cfg, c_abs, ctx)
+    flat_c = jax.tree_util.tree_leaves(c_abs)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(flat_c, flat_s):
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = int(np.prod([_FakeMesh.shape[a] for a in axes]))
+            assert dim % size == 0
+
+
+# --- data --------------------------------------------------------------------
+
+def test_statlog_shapes_match_paper():
+    X, y = make_statlog(n_features=8)
+    assert X.shape == (6435, 8)                 # paper: 6435 samples
+    assert int(y.max()) == 6                    # 7 classes
+    assert float(X.min()) >= 0.0 and float(X.max()) <= np.pi + 1e-6
+
+
+def test_eurosat_shapes_match_paper():
+    X, y = make_eurosat(n_features=8, n_samples=2700)
+    assert X.shape == (2700, 8)
+    assert int(y.max()) == 9                    # 10 classes
+
+
+def test_server_split_fractions():
+    X, y = make_statlog()
+    Xc, yc, server = server_split(X, y, server_frac=0.1)
+    n_srv = len(server["val"]["labels"]) + len(server["test"]["labels"])
+    assert abs(n_srv - 643) <= 1
+    assert len(yc) + n_srv == 6435
+
+
+def test_dirichlet_partition_is_skewed_but_complete():
+    X, y = make_statlog()
+    parts = dirichlet_partition(X, y, 10, alpha=0.3)
+    assert len(parts) == 10
+    sizes = {len(p["labels"]) for p in parts}
+    assert len(sizes) == 1                      # padded to equal size
+    # label skew: clients differ in label histograms
+    h0 = np.bincount(np.asarray(parts[0]["labels"]), minlength=7)
+    h1 = np.bincount(np.asarray(parts[1]["labels"]), minlength=7)
+    assert np.any(h0 != h1)
+
+
+def test_equal_partition():
+    X, y = make_statlog()
+    parts = equal_partition(X, y, 7)
+    assert len({len(p["labels"]) for p in parts}) == 1
+
+
+def test_lm_batches():
+    corpus = synthetic_corpus(10_000, 100)
+    assert int(corpus.max()) < 100
+    for b in lm_batches(corpus, 4, 32, 3):
+        assert b["tokens"].shape == (4, 32)
+        # labels are next tokens
+        assert bool(jnp.all(b["labels"][:, :-1] == b["tokens"][:, 1:]))
