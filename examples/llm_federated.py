@@ -8,9 +8,9 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import SatQFLConfig
+from repro.constellation import build_trace
+from repro.core import SatQFLConfig, compile_round_plan
 from repro.core.dist import fl_init_state, make_fl_round
 from repro.core.round import evaluate
 from repro.data import lm_batches, synthetic_corpus
@@ -29,7 +29,8 @@ def main():
     cfg = smoke_variant(get_config("qwen3-0.6b"))
     api = get_model(cfg)
     n_sats, E, Bn, S = args.sats, 3, 4, 64
-    fl = SatQFLConfig(mode="sim", local_steps=E, batch_size=Bn, lr=5e-2)
+    fl = SatQFLConfig(mode="sim", n_rounds=args.rounds, local_steps=E,
+                      batch_size=Bn, lr=5e-2)
     opt = sgd(fl.lr)
     state = fl_init_state(cfg, api, opt, n_sats, jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
@@ -39,8 +40,12 @@ def main():
     round_fn = jax.jit(make_fl_round(cfg, api, fl, opt, n_sats,
                                      security=args.security))
     corpus = synthetic_corpus(200_000, cfg.vocab_size)
-    rng = np.random.default_rng(0)
-    seeds = jnp.asarray(rng.integers(0, 2**32, n_sats, dtype=np.uint32))
+
+    # schedule inputs (participation / pad seeds / weights) come from a
+    # real constellation trace compiled into a RoundPlan
+    trace = build_trace(n_sats=n_sats, n_planes=max(n_sats // 2, 1),
+                        duration_s=3600, step_s=60)
+    plan = compile_round_plan(trace, fl)
 
     eval_batch = next(lm_batches(corpus, 8, S, 1, seed=99))
     for r in range(args.rounds):
@@ -52,8 +57,8 @@ def main():
             "labels": jnp.stack([jnp.stack([b["labels"] for b in bs])
                                  for bs in per_sat]),
         }
-        mask = jnp.ones((n_sats,), jnp.float32)
-        state, metrics = round_fn(state, batches, mask, seeds)
+        mask, seeds, weights = plan.dist_inputs(r)
+        state, metrics = round_fn(state, batches, mask, seeds, weights)
         g_params = jax.tree_util.tree_map(lambda x: x[0], state.params)
         vl, va = evaluate(api, cfg, g_params, eval_batch)
         print(f"round {r}: local_loss={float(metrics['loss']):.4f} "

@@ -17,6 +17,7 @@ from repro.constellation.visibility import (
 from repro.constellation.topology import (
     ConstellationTrace, build_trace, partition_roles, access_windows,
     participation_series, assign_secondaries, isl_routes,
+    isl_routes_batched, round_steps,
 )
 
 __all__ = [
@@ -25,4 +26,5 @@ __all__ = [
     "sat_ground_access", "sat_sat_access", "elevation_angle",
     "ConstellationTrace", "build_trace", "partition_roles", "access_windows",
     "participation_series", "assign_secondaries", "isl_routes",
+    "isl_routes_batched", "round_steps",
 ]

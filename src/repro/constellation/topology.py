@@ -94,6 +94,10 @@ def isl_routes(trace: ConstellationTrace, t_idx: int, h_max: int = 4,
 
     Returns (participation (n_sat,) bool, hops (n_sat,), latency_s (n_sat,)).
     Primaries have 0 hops; latency accumulates ISL propagation delays.
+
+    This is the scalar *reference* implementation (interpreted Python BFS,
+    one trace step at a time). The hot path is ``isl_routes_batched``, which
+    relaxes every round step at once with array ops; tests assert parity.
     """
     n = trace.n_sats
     pos = trace.sat_pos[:, t_idx]
@@ -118,6 +122,58 @@ def isl_routes(trace: ConstellationTrace, t_idx: int, h_max: int = 4,
         frontier = nxt
     part = np.isfinite(hops)
     return part, hops, lat
+
+
+def isl_routes_batched(trace: ConstellationTrace, t_idxs,
+                       h_max: int = 4, l_max_s: float = 0.25):
+    """Vectorized ``isl_routes`` over a batch of trace steps.
+
+    Replaces the per-round interpreted BFS (O(rounds · n²) Python loops)
+    with a hop-synchronous frontier relaxation over ALL round steps at
+    once: at hop level h, every not-yet-reached satellite takes the
+    minimum latency over the satellites settled at level h-1, subject to
+    the L_max latency budget. The recorded latency is the best (minimum)
+    latency among min-hop paths, where the BFS keeps the first feasible
+    one it happens to visit — so when the latency budget binds on a tie,
+    this relaxation can admit a satellite (or a shorter hop count) the
+    order-dependent BFS missed: reachability here is a superset of the
+    BFS's, equal whenever L_max is slack (the default geometry; tests and
+    bench_constellation assert empirical parity on real traces).
+
+    Returns (participation (R, n_sat) bool, hops (R, n_sat) float,
+    latency_s (R, n_sat) float) with inf marking unreachable satellites.
+    """
+    t_idxs = np.asarray(t_idxs, dtype=np.int64)
+    pos = trace.sat_pos[:, t_idxs].transpose(1, 0, 2)       # (R, n, 3)
+    isl = trace.ss_access[:, :, t_idxs].transpose(2, 0, 1)  # (R, n, n)
+    prim = trace.sg_access[:, :, t_idxs].any(axis=1).T      # (R, n)
+
+    d = pairwise_distances(pos)
+    w = np.where(isl, d / SPEED_OF_LIGHT_KM_S, np.inf)      # (R, n, n)
+
+    lat = np.where(prim, 0.0, np.inf)
+    hops = np.where(prim, 0.0, np.inf)
+    for h in range(1, h_max + 1):
+        settled = hops == (h - 1)                           # (R, n)
+        if not settled.any():
+            break
+        # unsettled sources carry inf latency, so inf + w drops out of min
+        best = (np.where(settled, lat, np.inf)[:, :, None] + w).min(axis=1)
+        ok = (best <= l_max_s) & ~np.isfinite(hops)
+        lat = np.where(ok, best, lat)
+        hops = np.where(ok, float(h), hops)
+    return np.isfinite(hops), hops, lat
+
+
+def pairwise_distances(pos: np.ndarray) -> np.ndarray:
+    """Batched ‖p_i − p_j‖ (..., n, n) via the Gram expansion — avoids
+    materializing the (..., n, n, 3) difference tensor. f64 throughout:
+    the expansion cancels catastrophically in f32 at LEO radii."""
+    pos = np.asarray(pos, np.float64)
+    n2 = np.einsum('...ik,...ik->...i', pos, pos)
+    g = pos @ np.swapaxes(pos, -1, -2)
+    d2 = n2[..., :, None] + n2[..., None, :] - 2.0 * g
+    return np.sqrt(np.maximum(d2, 0.0))
 
 
 def access_windows(trace: ConstellationTrace, sat: int, other: int | None = None,
@@ -146,11 +202,13 @@ def participation_series(trace: ConstellationTrace, n_rounds: int,
     Rounds are spread across the trace (stride = T / n_rounds by default),
     matching "schedule training aligned with visibility windows".
     """
-    T = trace.n_steps
-    stride = round_stride or max(T // n_rounds, 1)
-    out = np.zeros((n_rounds, trace.n_sats), bool)
-    for r in range(n_rounds):
-        t_idx = min(r * stride, T - 1)
-        part, _, _ = isl_routes(trace, t_idx, h_max, l_max_s)
-        out[r] = part
-    return out
+    t_idxs = round_steps(trace, n_rounds, round_stride)
+    part, _, _ = isl_routes_batched(trace, t_idxs, h_max, l_max_s)
+    return part
+
+
+def round_steps(trace: ConstellationTrace, n_rounds: int,
+                round_stride: int | None = None) -> np.ndarray:
+    """(n_rounds,) trace-step index of each FL round (stride = T/n_rounds)."""
+    stride = round_stride or max(trace.n_steps // max(n_rounds, 1), 1)
+    return np.minimum(np.arange(n_rounds) * stride, trace.n_steps - 1)

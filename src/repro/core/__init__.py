@@ -1,6 +1,7 @@
 """sat-QFL core: the paper's contribution as a composable JAX module.
 
-Two execution scales, same semantics:
+Two execution scales, one schedule compiler (``plan``: trace + config →
+vectorized ``RoundPlan`` arrays both engines consume), same semantics:
 
   * ``round``  — host-orchestrated hierarchical rounds at the paper's scale
     (50 satellites × VQC on Statlog/EuroSAT): Algorithm 1 with all three
@@ -16,6 +17,7 @@ Two execution scales, same semantics:
 """
 from repro.core.flconfig import SatQFLConfig
 from repro.core.comm import CommModel, CommLog
+from repro.core.plan import RoundPlan, compile_round_plan
 from repro.core.round import SatQFLTrainer, evaluate
 from repro.core.dist import (
     FLState, make_fl_round, fl_input_specs, make_secure_exchange,
@@ -23,5 +25,6 @@ from repro.core.dist import (
 
 __all__ = [
     "SatQFLConfig", "CommModel", "CommLog", "SatQFLTrainer", "evaluate",
+    "RoundPlan", "compile_round_plan",
     "FLState", "make_fl_round", "fl_input_specs", "make_secure_exchange",
 ]

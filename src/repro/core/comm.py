@@ -47,7 +47,13 @@ class CommModel:
 
 @dataclass
 class CommLog:
-    """Accumulates per-round communication/security costs."""
+    """Accumulates per-round communication/security costs.
+
+    Individual link transfers are *counted* (``count_transfer``) as they
+    happen, but their wall time is aggregated per round (parallel groups
+    overlap) and recorded once via ``add_wall`` — so ``n_transfers`` counts
+    real link uses, never wall-clock bookkeeping records.
+    """
     transfer_s: float = 0.0
     wait_s: float = 0.0
     security_s: float = 0.0
@@ -55,10 +61,12 @@ class CommLog:
     n_transfers: int = 0
     per_round: list = field(default_factory=list)
 
-    def add_transfer(self, seconds: float, nbytes: int):
-        self.transfer_s += seconds
+    def count_transfer(self, nbytes: int):
         self.bytes_moved += nbytes
         self.n_transfers += 1
+
+    def add_wall(self, seconds: float):
+        self.transfer_s += seconds
 
     def add_wait(self, seconds: float):
         self.wait_s += seconds

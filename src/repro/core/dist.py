@@ -154,11 +154,19 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
                   ctx: DistCtx | None = None):
     """Build the jit-able round function.
 
-    round_fn(state, batches, part_mask, seeds) -> (state, metrics)
+    round_fn(state, batches, part_mask, seeds, weights=None)
+        -> (state, metrics)
 
-      batches:   pytree, leaves (n_sat, local_steps, batch, ...)
+      batches:   pytree, leaves (n_sat, steps, batch, ...) — steps is
+                 local_steps (sim/async/qfl) or seq_hops·local_steps (seq:
+                 each hop of the chain consumes its own slice)
       part_mask: (n_sat,) float — visibility-window participation (async)
       seeds:     (n_sat,) uint32 — per-edge QKD-derived pad seeds
+      weights:   (n_sat,) float — FedAvg sample-count weights (None = uniform)
+
+    All three per-round inputs come from a compiled
+    :class:`repro.core.plan.RoundPlan` (``plan.dist_inputs(r)``) so the
+    in-graph engine follows the constellation trace, not caller guesses.
     """
     if security == "otp_gather" and fl.mode not in ("sim", "qfl"):
         raise ValueError("otp_gather models the central-server topology — "
@@ -186,20 +194,40 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
 
     vtrain = jax.vmap(local_train, in_axes=(0, 0, 0, None))
 
-    def round_fn(state: FLState, batches, part_mask, seeds):
+    def _hop_batches(batches, hop):
+        """Hop h of the chain trains on steps [h·E, (h+1)·E) of the batch
+        axis (wrapping if the caller under-provisioned), so sequential
+        hops see DISTINCT data instead of replaying the same batches."""
+        E = fl.local_steps
+
+        def slc(x):
+            idx = (jnp.arange(E) + hop * E) % x.shape[1]
+            return jnp.take(x, idx, axis=1)
+
+        return jax.tree_util.tree_map(slc, batches)
+
+    def round_fn(state: FLState, batches, part_mask, seeds, weights=None):
         r = state.round_idx
         step0 = r * fl.local_steps
+        # secagg's ring masks telescope to zero only under UNIFORM weights;
+        # sample-count FedAvg there would need weighted secret sharing
+        if weights is None or security == "secagg":
+            w_agg = jnp.ones((n_sats,))
+        else:
+            w_agg = weights
 
         if fl.mode == "seq":
             # pipelined sequential: train -> secure hand-off to next satellite
             p, o = state.params, state.opt_slots
             losses = jnp.zeros(())
             for hop in range(seq_hops):
-                p, o, l = vtrain(p, o, jax.tree_util.tree_map(
-                    lambda x: x, batches), step0 + hop)
+                p, o, l = vtrain(p, o, _hop_batches(batches, hop),
+                                 step0 + hop)
                 p = exchange(p, seeds ^ jnp.uint32(hop + 1), r)
                 p = jax.tree_util.tree_map(lambda x: jnp.roll(x, 1, axis=0), p)
                 losses = losses + jnp.mean(l)
+            # each slot now holds a chain that visited seq_hops satellites,
+            # so per-satellite sample weights don't map to slots — uniform
             new_params = _wmean_sats(p, jnp.ones((n_sats,)))
             mean_loss = losses / seq_hops
             new_stale, new_age = state.stale, state.stale_age
@@ -207,7 +235,7 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
             p, o, l = vtrain(state.params, state.opt_slots, batches, step0)
             mean_loss = jnp.mean(l)
             if fl.mode == "sim" or fl.mode == "qfl":
-                w = jnp.ones((n_sats,))
+                w = w_agg
                 if security == "otp_gather":
                     # PAPER-FAITHFUL topology: the aggregator receives every
                     # satellite's ciphertext (an all-gather of the stacked
@@ -227,19 +255,25 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
             elif fl.mode == "async":
                 # deliver participants now; buffer the rest (bounded staleness)
                 moved = exchange(p, seeds, r)
-                w_now = part_mask
+                sel_now = part_mask                       # binary selects
                 # stale buffer usable if within Δ_max
                 stale_ok = ((state.stale_age >= 0)
                             & (state.stale_age <= fl.max_staleness))
-                w_stale = stale_ok.astype(jnp.float32) * (1.0 - part_mask)
+                sel_stale = stale_ok.astype(jnp.float32) * (1.0 - part_mask)
                 combined = jax.tree_util.tree_map(
                     lambda now, st: (now.astype(jnp.float32)
-                                     * _bshape(w_now, now)
+                                     * _bshape(sel_now, now)
                                      + st.astype(jnp.float32)
-                                     * _bshape(w_stale, st)).astype(now.dtype),
+                                     * _bshape(sel_stale, st)).astype(now.dtype),
                     moved, state.stale)
-                w_tot = w_now + w_stale
-                new_params = _wmean_sats(combined, w_tot)
+                # sample-count weights enter only the normalized mean
+                w_tot = (sel_now + sel_stale) * w_agg
+                # nobody delivered and no usable stale buffer → keep the
+                # model (a zero-weight mean would zero every parameter)
+                any_w = jnp.sum(w_tot) > 0
+                new_params = jax.tree_util.tree_map(
+                    lambda m, old: jnp.where(any_w, m, old),
+                    _wmean_sats(combined, w_tot), state.params)
                 # rebuffer: non-participants' fresh updates wait for a window
                 new_stale = jax.tree_util.tree_map(
                     lambda fresh, st: jnp.where(
@@ -250,8 +284,8 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
             else:
                 raise ValueError(fl.mode)
 
-        return FLState(new_params, o if fl.mode != "seq" else o,
-                       new_stale, new_age, r + 1), {"loss": mean_loss}
+        return FLState(new_params, o, new_stale, new_age, r + 1), \
+            {"loss": mean_loss}
 
     return round_fn
 
@@ -276,9 +310,10 @@ def fl_init_state(model_cfg, api, optimizer, n_sats: int, key) -> FLState:
 
 
 def fl_input_specs(model_cfg, api, fl: SatQFLConfig, n_sats: int,
-                   feature_shape: tuple, n_classes: int):
+                   feature_shape: tuple, n_classes: int, seq_hops: int = 1):
     """ShapeDtypeStructs for the FL dry-run (classifier workloads)."""
-    bs = (n_sats, fl.local_steps, fl.batch_size)
+    steps = fl.local_steps * (seq_hops if fl.mode == "seq" else 1)
+    bs = (n_sats, steps, fl.batch_size)
     return {
         "batches": {
             "features": jax.ShapeDtypeStruct(bs + feature_shape, jnp.float32),
@@ -286,4 +321,5 @@ def fl_input_specs(model_cfg, api, fl: SatQFLConfig, n_sats: int,
         },
         "part_mask": jax.ShapeDtypeStruct((n_sats,), jnp.float32),
         "seeds": jax.ShapeDtypeStruct((n_sats,), jnp.uint32),
+        "weights": jax.ShapeDtypeStruct((n_sats,), jnp.float32),
     }

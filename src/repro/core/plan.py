@@ -1,0 +1,200 @@
+"""RoundPlan: the trace → schedule compiler shared by both FL engines.
+
+A ``ConstellationTrace`` + ``SatQFLConfig`` is compiled ONCE into dense
+per-round arrays — roles S_p(t), the secondary→primary assignment, the
+participation mask P_i(t), per-edge window waits, group sizes (ISL
+concurrency), FedAvg weights, and the per-round QKD pad-seed schedule from
+``KeyManager``. Both execution scales consume the same plan:
+
+  * ``repro.core.round.SatQFLTrainer`` (host-orchestrated, paper scale)
+    reads groups/waits/weights per round instead of re-deriving roles and
+    re-walking the ISL graph inside the round loop;
+  * ``repro.core.dist.make_fl_round`` (in-graph, mesh scale) is fed
+    ``plan.dist_inputs(r)`` — trace-faithful participation masks, pad
+    seeds, and sample-count weights — instead of caller-invented arrays.
+
+All trace math is vectorized over rounds (``isl_routes_batched`` frontier
+relaxation, batched nearest-primary assignment, batched window search), so
+compiling a plan is O(array ops), not O(rounds · n²) interpreted loops.
+New scenarios (dropout models, alternative schedulers, multi-ground-station
+routing) become transforms over these arrays rather than engine forks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.constellation.topology import (
+    ConstellationTrace, isl_routes_batched, pairwise_distances, round_steps,
+)
+from repro.core.flconfig import SatQFLConfig
+from repro.security.keys import KeyManager
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """Dense per-round schedule. Shapes: R = n_rounds, N = n_sats."""
+    n_rounds: int
+    n_sats: int
+    step_s: float                 # trace sampling interval
+    t_idx: np.ndarray             # (R,)   int — trace step of each round
+    primary_mask: np.ndarray      # (R, N) bool — S_p(t): sees a ground station
+    assignment: np.ndarray        # (R, N) int — secondary → its primary;
+                                  #   primaries map to themselves; -1 = unreachable
+    part_mask: np.ndarray         # (R, N) float32 — P_i(t) within (H_max, L_max)
+    hops: np.ndarray              # (R, N) float — ISL hops to a primary (inf = none)
+    latency_s: np.ndarray         # (R, N) float — accumulated ISL latency
+    window_wait_s: np.ndarray     # (R, N) float — seconds until the sat↔main ISL
+                                  #   window opens (0 = open now, inf = never)
+    group_size: np.ndarray        # (R, N) int — #secondaries uploading to this
+                                  #   sat's main (the ISL concurrency divisor)
+    seeds: np.ndarray             # (R, N) uint32 — QKD-derived pad seed of each
+                                  #   sat's uplink edge at round r
+    weights: np.ndarray           # (N,) float32 — FedAvg aggregation weights w_i
+
+    # ------------------------------------------------------------------
+    # per-round views
+    # ------------------------------------------------------------------
+    def groups(self, r: int) -> dict[int, list[int]]:
+        """{main: [secondaries]} at round r (the paper's {SecSat} grouping)."""
+        a = self.assignment[r]
+        prim = self.primary_mask[r]
+        out: dict[int, list[int]] = {int(p): [] for p in np.where(prim)[0]}
+        for s in np.where(~prim & (a >= 0))[0]:
+            out[int(a[s])].append(int(s))
+        return out
+
+    def unreachable(self, r: int) -> list[int]:
+        return [int(s) for s in np.where(self.assignment[r] < 0)[0]]
+
+    def participants(self, r: int) -> int:
+        return int(self.part_mask[r].sum())
+
+    def dist_inputs(self, r: int):
+        """(part_mask, seeds, weights) device arrays for ``make_fl_round``."""
+        return (jnp.asarray(self.part_mask[r], jnp.float32),
+                jnp.asarray(self.seeds[r], jnp.uint32),
+                jnp.asarray(self.weights, jnp.float32))
+
+
+def _nearest_primary_assignment(pos, isl, prim):
+    """Vectorized nearest-ISL-visible-primary per secondary.
+
+    pos (R, N, 3), isl (R, N, N) bool, prim (R, N) bool →
+    assignment (R, N) int (primaries → self, unreachable → -1).
+    """
+    R, N = prim.shape
+    d = pairwise_distances(pos)
+    cand = isl & prim[:, None, :]                  # s (axis 1) can reach p (axis 2)
+    dmask = np.where(cand, d, np.inf)
+    nearest = dmask.argmin(axis=2)                 # ties → lowest index, as legacy
+    reachable = cand.any(axis=2)
+    idx = np.broadcast_to(np.arange(N), (R, N))
+    return np.where(prim, idx, np.where(reachable, nearest, -1)).astype(np.int64)
+
+
+def _window_waits(trace: ConstellationTrace, t_idx, assignment, prim):
+    """Seconds from each round's step until the (sat, main) ISL opens."""
+    R, N = assignment.shape
+    step = float(trace.times_s[1] - trace.times_s[0]) if trace.n_steps > 1 else 0.0
+    waits = np.zeros((R, N))
+    sat_idx = np.arange(N)
+    for r in range(R):                             # R is small; inner ops vectorized
+        t = int(t_idx[r])
+        main = np.clip(assignment[r], 0, None)
+        series = trace.ss_access[sat_idx, main, t:]          # (N, T - t)
+        has = series.any(axis=1)
+        first = series.argmax(axis=1)
+        w = np.where(has, first * step, np.inf)
+        waits[r] = np.where(prim[r], 0.0, np.where(assignment[r] >= 0, w, np.inf))
+    return waits
+
+
+def _seed_schedule(trace, t_idx, assignment, prim, fl: SatQFLConfig,
+                   keymgr: KeyManager | None):
+    """(R, N) uint32 round seeds for every satellite's uplink edge.
+
+    qfl mode uplinks over feeder beams (edge (sat, "gs")); hierarchical
+    modes uplink secondaries over their assigned ISL and primaries over
+    the feeder. Seeds come from the KeyManager's BB84-established edge
+    keys with the round index folded in (fresh pad every round).
+    """
+    R, N = assignment.shape
+    if keymgr is None:
+        keymgr = KeyManager(jax.random.PRNGKey(fl.seed + 7),
+                            n_qkd_bits=fl.qkd_bits)
+    seeds = np.zeros((R, N), np.uint32)
+    for r in range(R):
+        for s in range(N):
+            if fl.mode == "qfl" or prim[r, s]:
+                edge = ("gs", s)
+            elif assignment[r, s] >= 0:
+                edge = (s, int(assignment[r, s]))
+            else:
+                continue                    # unreachable: no uplink, seed 0
+            seeds[r, s] = np.uint32(keymgr.get(edge).round_seed(r))
+    return seeds
+
+
+def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
+                       sample_counts=None, keymgr: KeyManager | None = None,
+                       round_stride: int | None = None,
+                       with_seeds: bool = True) -> RoundPlan:
+    """Compile trace + config into a :class:`RoundPlan`.
+
+    sample_counts — per-satellite dataset sizes for FedAvg weighting
+    (ignored unless ``fl.weight_by_samples``); keymgr — reuse an existing
+    QKD key registry (e.g. the trainer's) so plan seeds match its pads;
+    with_seeds=False skips BB84 entirely (plans for security="none").
+    """
+    t_idx = round_steps(trace, fl.n_rounds, round_stride)
+    R, N = fl.n_rounds, trace.n_sats
+
+    prim = trace.sg_access[:, :, t_idx].any(axis=1).T            # (R, N)
+    pos = trace.sat_pos[:, t_idx].transpose(1, 0, 2)             # (R, N, 3)
+    isl = trace.ss_access[:, :, t_idx].transpose(2, 0, 1)        # (R, N, N)
+
+    assignment = _nearest_primary_assignment(pos, isl, prim)
+    part, hops, lat = isl_routes_batched(trace, t_idx, fl.h_max, fl.l_max_s)
+
+    # group sizes: how many secondaries upload to each main, broadcast back
+    # to every member of the group (primaries included)
+    sec_of = np.where(prim, -1, assignment)                      # (R, N)
+    counts = np.zeros((R, N), np.int64)
+    for r in range(R):
+        tgt = sec_of[r][sec_of[r] >= 0]
+        counts[r] = np.bincount(tgt, minlength=N)
+    main_of = np.clip(assignment, 0, None)
+    group_size = np.where(assignment >= 0,
+                          np.take_along_axis(counts, main_of, axis=1), 0)
+
+    waits = _window_waits(trace, t_idx, assignment, prim)
+
+    if with_seeds:
+        seeds = _seed_schedule(trace, t_idx, assignment, prim, fl, keymgr)
+    else:
+        seeds = np.zeros((R, N), np.uint32)
+
+    if fl.weight_by_samples and sample_counts is not None:
+        weights = np.asarray(sample_counts, np.float32)
+        assert weights.shape == (N,), "one sample count per satellite"
+    else:
+        weights = np.ones((N,), np.float32)
+
+    return RoundPlan(
+        n_rounds=R, n_sats=N,
+        step_s=float(trace.times_s[1] - trace.times_s[0]) if trace.n_steps > 1
+        else 0.0,
+        t_idx=np.asarray(t_idx),
+        primary_mask=prim,
+        assignment=assignment,
+        part_mask=part.astype(np.float32),
+        hops=hops, latency_s=lat,
+        window_wait_s=waits,
+        group_size=group_size,
+        seeds=seeds,
+        weights=weights,
+    )

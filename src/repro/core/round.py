@@ -13,19 +13,16 @@ implementation — the mesh-scale in-graph version lives in ``repro.core.dist``.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.constellation.topology import (
-    ConstellationTrace, access_windows, assign_secondaries, partition_roles,
-)
+from repro.constellation.topology import ConstellationTrace
 from repro.core.comm import CommLog, CommModel
 from repro.core.flconfig import SatQFLConfig
+from repro.core.plan import RoundPlan, compile_round_plan
 from repro.nn.optim import get_optimizer, inv_sqrt_schedule, constant_schedule
 from repro.nn.pytree import tree_bytes, tree_weighted_sum
 from repro.security.keys import KeyManager
@@ -106,7 +103,14 @@ class SatQFLTrainer:
         self.history: list[RoundMetrics] = []
 
         self._jit_local = jax.jit(self._local_train_impl)
-        self._round_stride = max(trace.n_steps // max(fl.n_rounds, 1), 1)
+        # the whole schedule — roles, assignments, participation, window
+        # waits, FedAvg weights — is compiled from the trace once up front;
+        # no seed schedule: this engine derives pads live from the
+        # KeyManager inside _exchange (QBER/abort semantics need it)
+        self.plan: RoundPlan = compile_round_plan(
+            trace, fl,
+            sample_counts=[len(next(iter(d.values()))) for d in sat_data],
+            with_seeds=False)
 
     # ------------------------------------------------------------------
     # local training (jitted once; shapes shared across satellites)
@@ -144,8 +148,7 @@ class SatQFLTrainer:
         nbytes = tree_bytes(params)
         t = (self.comm.isl_transfer(nbytes, concurrent) if link == "isl"
              else self.comm.feeder_transfer(nbytes, concurrent))
-        self.log.bytes_moved += nbytes
-        self.log.n_transfers += 1
+        self.log.count_transfer(nbytes)   # wall time recorded per round
         if fl.security == "none":
             return params, t
 
@@ -199,128 +202,139 @@ class SatQFLTrainer:
         raise ValueError(fl.security)
 
     # ------------------------------------------------------------------
-    # window wait for async deliveries (trace-driven)
+    # shared aggregation + accounting helpers (all schedulers use these)
     # ------------------------------------------------------------------
-    def _window_wait(self, sat: int, main: int, t_idx: int) -> float | None:
-        """Seconds until (sat, main) ISL access opens; 0 if open; None if
-        never within the trace."""
-        series = self.trace.ss_access[sat, main, t_idx:]
-        hits = np.where(series)[0]
-        if len(hits) == 0:
-            return None
-        return float(hits[0] * (self.trace.times_s[1] - self.trace.times_s[0]))
+    def _weight_of(self, s: int) -> float:
+        return float(self.plan.weights[s])
+
+    def _aggregate(self, models: list, ws: list):
+        """FedAvg: normalized weighted sum; ws parallel to models."""
+        wsum = sum(ws)
+        return tree_weighted_sum(models, [w / wsum for w in ws])
+
+    # ------------------------------------------------------------------
+    # per-mode group schedulers — each merges one {main: secs} group and
+    # returns (merged_params, group_wall_s, group_wait_s, delivered_count)
+    # ------------------------------------------------------------------
+    def _merge_seq(self, r: int, main: int, secs: list):
+        # the chain is SERIAL: wall = sum of hop transfers
+        theta = self.global_params
+        chain_wall = 0.0
+        for s in secs:
+            theta, _ = self._train_sat(s, theta)
+            theta, t = self._exchange(theta, (s, main), r, "isl")
+            chain_wall += t
+        return theta, chain_wall, 0.0, len(secs)
+
+    def _merge_sim(self, r: int, main: int, secs: list):
+        # parallel uploads CONTEND for the main's ISL aperture
+        # (bandwidth / n_concurrent): wall = max over secs
+        collected, ws, up_walls = [], [], [0.0]
+        for s in secs:
+            p, _ = self._train_sat(s, self.global_params)
+            p, t = self._exchange(p, (s, main), r, "isl",
+                                  concurrent=max(len(secs), 1))
+            up_walls.append(t)
+            collected.append(p)
+            ws.append(self._weight_of(s))
+        merged = (self._aggregate(collected, ws) if collected
+                  else self.global_params)
+        return merged, max(up_walls), 0.0, len(secs)
+
+    def _merge_async(self, r: int, main: int, secs: list):
+        q = self.pending.setdefault(main, [])
+        up_walls, waits = [0.0], [0.0]
+        for s in secs:
+            p, _ = self._train_sat(s, self.global_params)
+            wait = float(self.plan.window_wait_s[r, s])
+            if not np.isfinite(wait):
+                continue                    # no window in trace: update dropped
+            waits.append(min(wait, self.comm.window_wait_s))
+            p, t = self._exchange(p, (s, main), r, "isl")
+            up_walls.append(t)
+            q.append((p, self._weight_of(s), r))
+        # aggregate deliveries within Δ_max (bounded staleness)
+        fresh = [(p, w, born) for (p, w, born) in q
+                 if r - born <= self.fl.max_staleness]
+        self.pending[main] = []
+        if fresh:
+            merged = self._aggregate([p for p, _, _ in fresh],
+                                     [w for _, w, _ in fresh])
+            delivered = len(fresh)
+        else:
+            merged, delivered = self.global_params, 0
+        return merged, max(up_walls), max(waits), delivered
+
+    _GROUP_SCHEDULERS = {"seq": _merge_seq, "sim": _merge_sim,
+                         "async": _merge_async}
+
+    # ------------------------------------------------------------------
+    # round schedulers
+    # ------------------------------------------------------------------
+    def _round_qfl(self, r: int) -> int:
+        """Flat FedAvg baseline: every satellite talks to the server over
+        its own feeder beam — transfers are PARALLEL (wall = max)."""
+        updates, ws, walls = [], [], [0.0]
+        for s in range(self.n_sats):
+            p, _ = self._train_sat(s, self.global_params)
+            p, t = self._exchange(p, ("gs", s), r, "feeder")
+            walls.append(t)
+            updates.append(p)
+            ws.append(self._weight_of(s))
+        self.log.add_wall(2 * max(walls))   # up + broadcast down
+        self.global_params = self._aggregate(updates, ws)
+        return self.n_sats
+
+    def _round_hierarchical(self, r: int) -> int:
+        """Algorithm 1 proper: per-group merge (mode-specific), optional
+        main-satellite training, feeder uplink, global FedAvg."""
+        fl = self.fl
+        merge_group = self._GROUP_SCHEDULERS[fl.mode]
+        main_models, main_ws = [], []
+        group_walls, feeder_walls, group_waits = [0.0], [0.0], [0.0]
+        participants = 0
+        for main, secs in self.plan.groups(r).items():
+            merged, wall, wait, delivered = merge_group(self, r, main, secs)
+            group_walls.append(wall)
+            group_waits.append(wait)
+            participants += delivered
+            if fl.main_trains:
+                merged, _ = self._train_sat(main, merged)
+                participants += 1
+            merged, t = self._exchange(merged, (main, "gs"), r, "feeder")
+            feeder_walls.append(t)
+            main_models.append(merged)
+            main_ws.append(self._weight_of(main)
+                           + sum(self._weight_of(s) for s in secs))
+        if main_models:
+            self.global_params = self._aggregate(main_models, main_ws)
+        # round wall: slowest group (groups run in parallel), then the
+        # slowest feeder uplink, plus the global broadcast back down;
+        # window waits overlap the same way, so the round blocks on the
+        # single slowest wait — recorded once, not once per group
+        self.log.add_wait(max(group_waits))
+        self.log.add_wall(max(group_walls) + 2 * max(feeder_walls))
+        return participants
 
     # ------------------------------------------------------------------
     # one round of Algorithm 1
     # ------------------------------------------------------------------
     def run_round(self, r: int) -> RoundMetrics:
         fl = self.fl
-        t_idx = min(r * self._round_stride, self.trace.n_steps - 1)
+        if r >= self.plan.n_rounds:
+            raise IndexError(
+                f"round {r} beyond the compiled plan ({self.plan.n_rounds} "
+                f"rounds); construct the trainer with fl.n_rounds >= {r + 1}")
         m = RoundMetrics(round=r)
         round_t0 = self.log.total_s
         sec_t0 = self.log.security_s
-        if fl.weight_by_samples:
-            def weights_of(s):
-                return float(len(next(iter(self.sat_data[s].values()))))
-        else:
-            def weights_of(s):
-                return 1.0
 
         if fl.mode == "qfl":
-            # flat FedAvg baseline: every satellite talks to the server
-            # over its own feeder beam — transfers are PARALLEL (wall = max)
-            updates, ws, walls = [], [], [0.0]
-            for s in range(self.n_sats):
-                p, _ = self._train_sat(s, self.global_params)
-                p, t = self._exchange(p, ("gs", s), r, "feeder")
-                walls.append(t)
-                updates.append(p)
-                ws.append(weights_of(s))
-            self.log.add_transfer(2 * max(walls), 0)   # up + broadcast down
-            wsum = sum(ws)
-            self.global_params = tree_weighted_sum(
-                updates, [w / wsum for w in ws])
-            m.participants = self.n_sats
+            m.participants = self._round_qfl(r)
+        elif fl.mode in self._GROUP_SCHEDULERS:
+            m.participants = self._round_hierarchical(r)
         else:
-            assign, unreachable = assign_secondaries(self.trace, t_idx)
-            main_models, main_ws = [], []
-            group_walls, feeder_walls = [0.0], [0.0]
-            participants = 0
-            for main, secs in assign.items():
-                if fl.mode == "seq":
-                    # the chain is SERIAL: wall = sum of hop transfers
-                    theta = self.global_params
-                    chain_wall = 0.0
-                    for s in secs:
-                        theta, _ = self._train_sat(s, theta)
-                        theta, t = self._exchange(theta, (s, main), r, "isl")
-                        chain_wall += t
-                        participants += 1
-                    group_walls.append(chain_wall)
-                    merged = theta
-                elif fl.mode == "sim":
-                    # parallel uploads CONTEND for the main's ISL aperture
-                    # (bandwidth / n_concurrent): wall = max over secs
-                    collected, ws, up_walls = [], [], [0.0]
-                    for s in secs:
-                        p, _ = self._train_sat(s, self.global_params)
-                        p, t = self._exchange(p, (s, main), r, "isl",
-                                              concurrent=max(len(secs), 1))
-                        up_walls.append(t)
-                        collected.append(p)
-                        ws.append(weights_of(s))
-                        participants += 1
-                    group_walls.append(max(up_walls))
-                    if collected:
-                        wsum = sum(ws)
-                        merged = tree_weighted_sum(
-                            collected, [w / wsum for w in ws])
-                    else:
-                        merged = self.global_params
-                elif fl.mode == "async":
-                    q = self.pending.setdefault(main, [])
-                    async_walls = [0.0]
-                    for s in secs:
-                        p, _ = self._train_sat(s, self.global_params)
-                        wait = self._window_wait(s, main, t_idx)
-                        if wait is None:
-                            continue            # no window: update dropped
-                        w_s = min(wait, self.comm.window_wait_s) if wait > 0 else 0.0
-                        p, t = self._exchange(p, (s, main), r, "isl")
-                        async_walls.append(w_s + t)
-                        q.append((p, weights_of(s), r))
-                    group_walls.append(max(async_walls))
-                    # aggregate deliveries within Δ_max (bounded staleness)
-                    fresh = [(p, w, born) for (p, w, born) in q
-                             if r - born <= fl.max_staleness]
-                    self.pending[main] = []
-                    if fresh:
-                        wsum = sum(w for _, w, _ in fresh)
-                        merged = tree_weighted_sum(
-                            [p for p, _, _ in fresh],
-                            [w / wsum for _, w, _ in fresh])
-                        participants += len(fresh)
-                    else:
-                        merged = self.global_params
-                else:
-                    raise ValueError(fl.mode)
-
-                if fl.main_trains:
-                    merged, _ = self._train_sat(main, merged)
-                    participants += 1
-                merged, t = self._exchange(merged, (main, "gs"), r, "feeder")
-                feeder_walls.append(t)
-                main_models.append(merged)
-                main_ws.append(weights_of(main) + sum(weights_of(s)
-                                                      for s in secs))
-            if main_models:
-                wsum = sum(main_ws)
-                self.global_params = tree_weighted_sum(
-                    main_models, [w / wsum for w in main_ws])
-            # round wall: slowest group (groups run in parallel), then the
-            # slowest feeder uplink, plus the global broadcast back down
-            self.log.add_transfer(max(group_walls) + 2 * max(feeder_walls), 0)
-            m.participants = participants
+            raise ValueError(fl.mode)
 
         m.comm_s = self.log.total_s - round_t0
         m.security_s = self.log.security_s - sec_t0

@@ -97,7 +97,8 @@ def run_lm(args):
 
 
 def run_fl(args):
-    from repro.core import SatQFLConfig
+    from repro.constellation import build_trace
+    from repro.core import SatQFLConfig, compile_round_plan
     from repro.core.dist import fl_init_state, make_fl_round
     from repro.data import make_statlog, dirichlet_partition, server_split
     from repro.models import get_config, get_model
@@ -107,30 +108,42 @@ def run_fl(args):
         vqc_qubits=args.qubits, vqc_layers=2, n_features=args.qubits)
     api = get_model(cfg)
     n_sats = args.sats
-    fl = SatQFLConfig(mode=args.mode, local_steps=args.local_steps,
-                      batch_size=args.batch, lr=args.lr)
+    fl = SatQFLConfig(mode=args.mode, n_rounds=args.rounds,
+                      local_steps=args.local_steps,
+                      batch_size=args.batch, lr=args.lr, seed=args.seed)
     opt = sgd(fl.lr)
     state = fl_init_state(cfg, api, opt, n_sats, jax.random.PRNGKey(args.seed))
+    seq_hops = 4
     round_fn = jax.jit(make_fl_round(cfg, api, fl, opt, n_sats,
-                                     security=args.security))
+                                     security=args.security,
+                                     seq_hops=seq_hops))
 
     X, y = make_statlog(n_features=args.qubits)
     Xc, yc, server = server_split(X, y)
     sats = dirichlet_partition(Xc, yc, n_sats)
     per = min(len(s["features"]) for s in sats)
     E, Bn = fl.local_steps, fl.batch_size
+    steps = E * seq_hops if fl.mode == "seq" else E
+
+    # participation masks, pad seeds and FedAvg weights all come from the
+    # compiled constellation schedule — not invented here
+    trace = build_trace(n_sats=n_sats, n_planes=max(n_sats // 2, 1),
+                        duration_s=3600, step_s=60, seed=args.seed)
+    plan = compile_round_plan(
+        trace, fl, sample_counts=[len(s["labels"]) for s in sats],
+        with_seeds=(args.security != "none"))
 
     rng = np.random.default_rng(args.seed)
-    seeds = jnp.asarray(rng.integers(0, 2**32, n_sats, dtype=np.uint32))
-    print(f"[fl] mode={fl.mode} security={args.security} sats={n_sats}")
+    print(f"[fl] mode={fl.mode} security={args.security} sats={n_sats} "
+          f"(plan: {plan.participants(0)}/{n_sats} participate at r0)")
     for r in range(args.rounds):
-        idx = rng.integers(0, per, (n_sats, E, Bn))
+        idx = rng.integers(0, per, (n_sats, steps, Bn))
         batches = {
             "features": jnp.stack([s["features"][i] for s, i in zip(sats, idx)]),
             "labels": jnp.stack([s["labels"][i] for s, i in zip(sats, idx)]),
         }
-        mask = jnp.asarray(rng.random(n_sats) < 0.8, jnp.float32)
-        state, metrics = round_fn(state, batches, mask, seeds)
+        mask, seeds, weights = plan.dist_inputs(r)
+        state, metrics = round_fn(state, batches, mask, seeds, weights)
         # server metrics on the aggregated model (satellite 0's copy)
         g_params = jax.tree_util.tree_map(lambda x: x[0], state.params)
         from repro.core.round import evaluate

@@ -30,9 +30,11 @@ class EdgeKey:
     qber: float
     compromised: bool
 
-    def round_seed(self, round_idx: int) -> jnp.ndarray:
+    def round_seed(self, round_idx: int) -> np.uint32:
+        # host-side integer mix: callers (plan compilation walks every
+        # (round, sat) cell) must not pay a device round-trip per seed
         mix = ((self.seed * 2654435761) ^ (round_idx * 0x9E3779B9)) & 0xFFFFFFFF
-        return jnp.uint32(mix)
+        return np.uint32(mix)
 
     def mac_keys(self, round_idx: int):
         base = int(self.round_seed(round_idx))

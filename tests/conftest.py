@@ -9,12 +9,16 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
 import pytest
 
-from hypothesis import settings, HealthCheck
-
-settings.register_profile(
-    "ci", max_examples=20, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("ci")
+try:        # property-test modules importorskip hypothesis individually
+    from hypothesis import settings, HealthCheck
+except ImportError:
+    pass
+else:
+    settings.register_profile(
+        "ci", max_examples=20, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.load_profile("ci")
 
 
 @pytest.fixture(scope="session")

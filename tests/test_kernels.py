@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import apply_gate, otp_xor_mac, ssd_scan, swa_attention

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep
 from hypothesis import given, strategies as st
 
 from repro.nn import (

@@ -1,0 +1,199 @@
+"""RoundPlan: the compiled schedule must reproduce the legacy per-round
+topology walks, and both FL engines must consume the same plan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constellation import (
+    assign_secondaries, build_trace, isl_routes, participation_series,
+    partition_roles,
+)
+from repro.core import SatQFLConfig, SatQFLTrainer, compile_round_plan
+from repro.core.dist import fl_init_state, make_fl_round
+from repro.data import dirichlet_partition, make_statlog, server_split
+from repro.models import get_config, get_model
+from repro.nn.optim import sgd
+
+N_SATS = 12
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return build_trace(n_sats=N_SATS, n_planes=4, duration_s=1800, step_s=60)
+
+
+@pytest.fixture(scope="module")
+def plan(trace):
+    fl = SatQFLConfig(n_rounds=4)
+    return compile_round_plan(trace, fl, with_seeds=False)
+
+
+def test_plan_matches_legacy_roles_and_assignment(trace, plan):
+    for r in range(plan.n_rounds):
+        t = int(plan.t_idx[r])
+        p, s = partition_roles(trace, t)
+        assert set(np.where(plan.primary_mask[r])[0]) == set(p.tolist())
+        legacy, unreachable = assign_secondaries(trace, t)
+        got = plan.groups(r)
+        assert {k: sorted(v) for k, v in legacy.items()} \
+            == {k: sorted(v) for k, v in got.items()}
+        assert sorted(unreachable) == sorted(plan.unreachable(r))
+
+
+def test_plan_matches_legacy_routes(trace, plan):
+    fl = SatQFLConfig(n_rounds=4)
+    for r in range(plan.n_rounds):
+        part, hops, lat = isl_routes(trace, int(plan.t_idx[r]),
+                                     fl.h_max, fl.l_max_s)
+        assert np.array_equal(part, plan.part_mask[r] > 0)
+        assert np.array_equal(hops, plan.hops[r])
+        finite = np.isfinite(lat)
+        # batched relaxation records the best min-hop latency; the BFS
+        # keeps the first feasible one — best can only be <=, up to the
+        # legacy path's own f32 distance rounding (~3 ns at LEO ranges)
+        assert np.all(plan.latency_s[r][finite] <= lat[finite] + 1e-8)
+
+
+def test_participation_series_matches_bfs(trace):
+    n_rounds = 7
+    vec = participation_series(trace, n_rounds)
+    stride = max(trace.n_steps // n_rounds, 1)
+    for r in range(n_rounds):
+        ref, _, _ = isl_routes(trace, min(r * stride, trace.n_steps - 1))
+        assert np.array_equal(vec[r], ref)
+
+
+def test_window_waits(trace, plan):
+    step = float(trace.times_s[1] - trace.times_s[0])
+    for r in range(plan.n_rounds):
+        t = int(plan.t_idx[r])
+        for s in range(N_SATS):
+            if plan.primary_mask[r, s]:
+                assert plan.window_wait_s[r, s] == 0.0
+                continue
+            main = int(plan.assignment[r, s])
+            if main < 0:
+                assert np.isinf(plan.window_wait_s[r, s])
+                continue
+            hits = np.where(trace.ss_access[s, main, t:])[0]
+            want = float(hits[0] * step) if len(hits) else np.inf
+            assert plan.window_wait_s[r, s] == want
+
+
+def test_group_sizes(plan):
+    for r in range(plan.n_rounds):
+        for main, secs in plan.groups(r).items():
+            assert plan.group_size[r, main] == len(secs)
+            for s in secs:
+                assert plan.group_size[r, s] == len(secs)
+
+
+def test_seed_schedule_fresh_per_round(trace):
+    fl = SatQFLConfig(n_rounds=3, security="qkd")
+    plan = compile_round_plan(trace, fl)
+    active = plan.assignment >= 0
+    assert np.all(plan.seeds[active] != 0)
+    # fresh pad every round on every active edge (OTP keys never reuse)
+    assert not np.array_equal(plan.seeds[0], plan.seeds[1])
+
+
+@pytest.fixture(scope="module")
+def workload(trace):
+    cfg = get_config("vqc-satqfl").replace(vqc_qubits=4, vqc_layers=1,
+                                           n_features=4)
+    api = get_model(cfg)
+    X, y = make_statlog(n_features=4)
+    Xc, yc, server = server_split(X, y)
+    sats = dirichlet_partition(Xc, yc, N_SATS)
+    return cfg, api, sats, server
+
+
+def test_trainer_participants_follow_plan(trace, workload):
+    """The host engine's participant counts must be derivable from the
+    plan alone: every group's secondaries deliver + the main trains."""
+    cfg, api, sats, server = workload
+    fl = SatQFLConfig(mode="sim", n_rounds=2, local_steps=2, batch_size=8)
+    tr = SatQFLTrainer(cfg, api, fl, trace, sats, server)
+    hist = tr.run()
+    for r, m in enumerate(hist):
+        expect = sum(len(secs) + 1 for secs in tr.plan.groups(r).values())
+        assert m.participants == expect
+
+
+def test_both_engines_consume_one_plan(trace, workload):
+    """dist round driven by plan.dist_inputs must see exactly the
+    participation the host plan prescribes."""
+    cfg, api, sats, server = workload
+    fl = SatQFLConfig(mode="async", n_rounds=2, local_steps=2, batch_size=8)
+    plan = compile_round_plan(
+        trace, fl, sample_counts=[len(s["labels"]) for s in sats],
+        with_seeds=False)
+    opt = sgd(fl.lr)
+    state = fl_init_state(cfg, api, opt, N_SATS, jax.random.PRNGKey(0))
+    rf = jax.jit(make_fl_round(cfg, api, fl, opt, N_SATS))
+    feats = jnp.stack([s["features"][:fl.local_steps * fl.batch_size]
+                       .reshape(fl.local_steps, fl.batch_size, -1)
+                       for s in sats])
+    labels = jnp.stack([s["labels"][:fl.local_steps * fl.batch_size]
+                        .reshape(fl.local_steps, fl.batch_size)
+                        for s in sats])
+    for r in range(fl.n_rounds):
+        mask, seeds, weights = plan.dist_inputs(r)
+        assert int(mask.sum()) == plan.participants(r)
+        assert np.array_equal(np.asarray(weights),
+                              [len(s["labels"]) for s in sats])
+        state, metrics = rf(state, {"features": feats, "labels": labels},
+                            mask, seeds, weights)
+        assert bool(jnp.isfinite(metrics["loss"]))
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+def test_dist_weights_change_aggregate(trace, workload):
+    cfg, api, sats, server = workload
+    fl = SatQFLConfig(mode="sim", n_rounds=1, local_steps=2, batch_size=8)
+    opt = sgd(fl.lr)
+    state = fl_init_state(cfg, api, opt, N_SATS, jax.random.PRNGKey(0))
+    rf = jax.jit(make_fl_round(cfg, api, fl, opt, N_SATS))
+    feats = jax.random.uniform(jax.random.PRNGKey(1),
+                               (N_SATS, 2, 8, 4), maxval=np.pi)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (N_SATS, 2, 8), 0, 7)
+    batches = {"features": feats, "labels": labels}
+    mask = jnp.ones((N_SATS,), jnp.float32)
+    seeds = jnp.arange(N_SATS, dtype=jnp.uint32)
+    skew = jnp.asarray([100.0] + [1.0] * (N_SATS - 1), jnp.float32)
+    s_uni, _ = rf(state, batches, mask, seeds, None)
+    s_skew, _ = rf(state, batches, mask, seeds, skew)
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree_util.tree_leaves(s_uni.params),
+                               jax.tree_util.tree_leaves(s_skew.params)))
+    assert diff > 1e-7    # sample-count weighting reaches the aggregate
+
+
+def test_seq_hops_consume_distinct_batches(workload):
+    """Hop h of the sequential chain must train on batch slice h — feeding
+    different data to later hops must change the result."""
+    cfg, api, sats, server = workload
+    n, E, hops = 4, 2, 2
+    fl = SatQFLConfig(mode="seq", local_steps=E, batch_size=8)
+    opt = sgd(fl.lr)
+    state = fl_init_state(cfg, api, opt, n, jax.random.PRNGKey(0))
+    rf = jax.jit(make_fl_round(cfg, api, fl, opt, n, seq_hops=hops))
+    feats = jax.random.uniform(jax.random.PRNGKey(3),
+                               (n, E * hops, 8, 4), maxval=np.pi)
+    labels = jax.random.randint(jax.random.PRNGKey(4), (n, E * hops, 8), 0, 7)
+    mask = jnp.ones((n,), jnp.float32)
+    seeds = jnp.arange(n, dtype=jnp.uint32)
+
+    b1 = {"features": feats, "labels": labels}
+    # same first-hop slice, different second-hop slice
+    feats2 = feats.at[:, E:].set(jax.random.uniform(
+        jax.random.PRNGKey(5), (n, E, 8, 4), maxval=np.pi))
+    b2 = {"features": feats2, "labels": labels}
+    s1, _ = rf(state, b1, mask, seeds, None)
+    s2, _ = rf(state, b2, mask, seeds, None)
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                               jax.tree_util.tree_leaves(s2.params)))
+    assert diff > 1e-7    # later hops actually saw the later slices
