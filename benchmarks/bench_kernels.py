@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_call
-from repro.kernels import apply_gate, otp_xor_mac, ssd_scan, swa_attention
+from repro.kernels import (apply_gate, apply_gate_layer, otp_xor_mac,
+                           ssd_scan, swa_attention)
 from repro.kernels.swa_attention.ref import swa_attention_ref
 from repro.models.blocks import ssd_ref
 from repro.quantum import statevector as sv
@@ -19,10 +20,10 @@ def bench_otp(n=65536):
     msg = jax.random.bits(key, (n,), jnp.uint32)
     pad = jax.random.bits(jax.random.fold_in(key, 1), (n,), jnp.uint32)
     f = jax.jit(lambda m, p: otp_xor_mac(m, p, jnp.uint32(1), jnp.uint32(2)))
-    us = time_call(f, msg, pad, iters=3)
+    us = time_call(f, msg, pad, iters=9)
     f_ref = jax.jit(lambda m, p: (m ^ p, poly_mac_u32(m ^ p, jnp.uint32(1),
                                                       jnp.uint32(2))))
-    us_ref = time_call(f_ref, msg, pad, iters=3)
+    us_ref = time_call(f_ref, msg, pad, iters=9)
     return {"kernel_us": us, "ref_us": us_ref, "words": n}
 
 
@@ -33,8 +34,28 @@ def bench_gate(nq=14):
     g = sv.u3_gate(0.5, 0.2, -0.1)
     f_k = jax.jit(lambda s: apply_gate(s, g, nq // 2))
     f_r = jax.jit(lambda s: sv.apply_1q(s, g, nq // 2))
-    return {"kernel_us": time_call(f_k, state, iters=3),
-            "ref_us": time_call(f_r, state, iters=3), "qubits": nq}
+    return {"kernel_us": time_call(f_k, state, iters=9),
+            "ref_us": time_call(f_r, state, iters=9), "qubits": nq}
+
+
+def bench_gate_layer(nq=12):
+    """Fused-layer kernel (all nq gates, one launch, state resident) vs the
+    per-gate kernel composition it replaces."""
+    key = jax.random.key(4)
+    re, im = jax.random.normal(key, (2, 2 ** nq))
+    state = ((re + 1j * im) / jnp.linalg.norm(re + 1j * im)).astype(jnp.complex64)
+    gates = jnp.stack([sv.u3_gate(0.3 + 0.1 * q, 0.2, -0.1 * q)
+                       for q in range(nq)])
+
+    def pergate(s):
+        for q in range(nq):
+            s = apply_gate(s, gates[q], q)
+        return s
+
+    f_k = jax.jit(lambda s: apply_gate_layer(s, gates))
+    f_p = jax.jit(pergate)
+    return {"kernel_us": time_call(f_k, state, iters=9),
+            "ref_us": time_call(f_p, state, iters=9), "qubits": nq}
 
 
 def bench_swa(S=512, W=128):
@@ -66,5 +87,6 @@ def bench_ssd(S=512):
 
 def quick():
     out = {"otp": bench_otp(16384), "gate": bench_gate(12),
+           "gate_layer": bench_gate_layer(12),
            "swa": bench_swa(256, 64), "ssd": bench_ssd(256)}
     return out, "interpret-mode"

@@ -1,0 +1,78 @@
+"""VQC evaluation-engine micro-benchmarks — the QFL workload's hot path.
+
+Measures, in the SAME run (so speedups compare like-for-like on the
+current machine):
+
+  forward      — per-gate vmapped circuit vs the fused batched pipeline
+                 (layer-gate tensor + CZ-ring diagonal + sign-matrix readout)
+  grad         — exact autodiff through the fused path
+  param_shift  — the serial per-parameter ``lax.map`` rule (pre-fusion
+                 baseline) vs the vectorized branch-stacked rule, plus the
+                 chunked variant that bounds peak memory
+
+Headline acceptance numbers (L=2, nq=8, B=32): fused forward ≥2x over
+per-gate, vectorized parameter-shift ≥5x over serial.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.models import get_config
+from repro.quantum import (
+    parameter_shift_grad, parameter_shift_grad_serial, vqc_init, vqc_logits,
+)
+from repro.quantum.vqc import vqc_loss
+
+
+def _setup(nq: int, L: int, B: int, seed: int = 0):
+    cfg = get_config("vqc-satqfl").replace(vqc_qubits=nq, vqc_layers=L,
+                                           n_features=nq)
+    key = jax.random.PRNGKey(seed)
+    params = vqc_init(cfg, key)
+    feats = jax.random.uniform(key, (B, nq), maxval=np.pi)
+    labels = jax.random.randint(key, (B,), 0, cfg.n_classes)
+    return cfg, params, feats, {"features": feats, "labels": labels}
+
+
+def bench_forward(nq=8, L=2, B=32):
+    cfg, params, feats, _ = _setup(nq, L, B)
+    f_fused = jax.jit(lambda p, x: vqc_logits(cfg, p, x, fused=True))
+    f_pergate = jax.jit(lambda p, x: vqc_logits(cfg, p, x, fused=False))
+    us_fused = time_call(f_fused, params, feats)
+    us_pergate = time_call(f_pergate, params, feats)
+    return {"fused_us": us_fused, "pergate_us": us_pergate,
+            "speedup": us_pergate / us_fused, "nq": nq, "L": L, "B": B}
+
+
+def bench_autodiff(nq=8, L=2, B=32):
+    cfg, params, _, batch = _setup(nq, L, B)
+    g = jax.jit(lambda p, b: jax.grad(lambda pp: vqc_loss(cfg, pp, b))(p))
+    return {"grad_us": time_call(g, params, batch), "nq": nq, "L": L, "B": B}
+
+
+def bench_param_shift(nq=8, L=2, B=32, chunk=8):
+    cfg, params, _, batch = _setup(nq, L, B)
+    g_vec = jax.jit(lambda p, b: parameter_shift_grad(cfg, p, b))
+    g_chunk = jax.jit(lambda p, b: parameter_shift_grad(cfg, p, b,
+                                                        chunk=chunk))
+    g_ser = jax.jit(lambda p, b: parameter_shift_grad_serial(cfg, p, b))
+    us_vec = time_call(g_vec, params, batch)
+    us_chunk = time_call(g_chunk, params, batch)
+    us_ser = time_call(g_ser, params, batch, iters=3)
+    return {"vectorized_us": us_vec, "chunked_us": us_chunk,
+            "serial_us": us_ser, "speedup": us_ser / us_vec,
+            "chunk": chunk, "n_params": 2 * L * nq, "nq": nq, "L": L, "B": B}
+
+
+def quick():
+    fwd = bench_forward()
+    ps = bench_param_shift()
+    out = {"forward": fwd, "autodiff": bench_autodiff(),
+           "param_shift": ps,
+           "forward_large": bench_forward(nq=10, L=2, B=64)}
+    derived = (f"fwd {fwd['speedup']:.1f}x; "
+               f"pshift {ps['speedup']:.1f}x")
+    return out, derived

@@ -34,7 +34,7 @@ def main(argv=None):
 
     from benchmarks import (bench_comm, bench_constellation,
                             bench_frameworks, bench_kernels, bench_security,
-                            roofline)
+                            bench_vqc, roofline)
 
     if args.full:
         benches = {
@@ -50,6 +50,7 @@ def main(argv=None):
                 n_sats=50, n_rounds=10, local_steps=8), ""),
             "constellation": lambda: (bench_constellation.scenario(), ""),
             "kernels": bench_kernels.quick,
+            "vqc": bench_vqc.quick,
             "roofline": roofline.quick,
         }
     else:
@@ -59,6 +60,7 @@ def main(argv=None):
             "comm": bench_comm.quick,
             "constellation": bench_constellation.quick,
             "kernels": bench_kernels.quick,
+            "vqc": bench_vqc.quick,
             "roofline": roofline.quick,
         }
 

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flconfig import SatQFLConfig
+from repro.core.gradients import make_grad_fn
 from repro.nn.optim import Optimizer
 from repro.sharding.context import DistCtx
 
@@ -180,12 +181,13 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
                          "'sim' schedule; use 'otp' for seq/async")
     exchange = make_secure_exchange(security)
 
+    grad_fn = make_grad_fn(api, model_cfg, fl)
+
     def local_train(params, slots, batches, step0):
         """E local SGD steps on one satellite (vmapped over the sat axis)."""
         def body(carry, batch):
             p, o, s = carry
-            loss, g = jax.value_and_grad(
-                lambda pp: api.loss(model_cfg, pp, batch))(p)
+            loss, g = grad_fn(p, batch)
             p, o = optimizer.update(g, o, p, s)
             return (p, o, s + 1), loss
 

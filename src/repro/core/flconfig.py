@@ -15,6 +15,9 @@ class SatQFLConfig:
     lr: float = 0.05
     optimizer: str = "sgd"       # sgd | momentum | adamw
     lr_schedule: str = "inv_sqrt"  # constant | inv_sqrt (Proposition 1)
+    grad_method: str = "autodiff"  # autodiff | param_shift (paper-faithful
+    #   hardware gradient rule — needs the model's ModelApi.shift_grad)
+    shift_chunk: int = 0         # param_shift: branch-stack chunk (0 = full)
 
     # --- topology constraints (paper §I-B) ---------------------------------
     h_max: int = 1               # ISL hops for secondary->main delivery

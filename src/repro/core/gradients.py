@@ -1,0 +1,34 @@
+"""Local-training gradient rule, shared by BOTH FL engines.
+
+``fl.grad_method`` selects how a satellite computes its local update:
+
+  autodiff     — exact reverse-mode through the simulator (fast path)
+  param_shift  — the hardware-faithful ±π/2 parameter-shift rule (what a
+                 real QPU evaluates; Qiskit QNN's gradient). Requires the
+                 model's ModelApi to expose ``shift_grad`` — the VQC wires
+                 in its vectorized rule; classical models raise.
+
+Both return ``(loss, grads)`` with identical pytree structure so the
+optimizer update and the jit/scan boundaries are untouched by the choice.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_grad_fn(api, model_cfg, fl):
+    """(params, batch) -> (loss, grads) under fl.grad_method."""
+    if fl.grad_method == "autodiff":
+        return lambda p, batch: jax.value_and_grad(
+            lambda pp: api.loss(model_cfg, pp, batch))(p)
+    if fl.grad_method == "param_shift":
+        if api.shift_grad is None:
+            raise ValueError(
+                "grad_method='param_shift' needs ModelApi.shift_grad — "
+                "only quantum models define a parameter-shift rule")
+
+        # the shift rule's base sweep already evaluates the batch — it
+        # reports the loss itself rather than paying a second forward
+        return lambda p, batch: api.shift_grad(
+            model_cfg, p, batch, chunk=fl.shift_chunk, with_loss=True)
+    raise ValueError(f"unknown grad_method {fl.grad_method!r}")

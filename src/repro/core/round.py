@@ -22,6 +22,7 @@ import numpy as np
 from repro.constellation.topology import ConstellationTrace
 from repro.core.comm import CommLog, CommModel
 from repro.core.flconfig import SatQFLConfig
+from repro.core.gradients import make_grad_fn
 from repro.core.plan import RoundPlan, compile_round_plan
 from repro.nn.optim import get_optimizer, inv_sqrt_schedule, constant_schedule
 from repro.nn.pytree import tree_bytes, tree_weighted_sum
@@ -117,12 +118,12 @@ class SatQFLTrainer:
     # ------------------------------------------------------------------
     def _local_train_impl(self, params, opt_state, data, key, step0):
         fl, api, cfg = self.fl, self.api, self.model_cfg
+        grad_fn = make_grad_fn(api, cfg, fl)
 
         def body(carry, k):
             p, o, s = carry
             batch = self.sample_batch(data, k, fl.batch_size)
-            loss, g = jax.value_and_grad(
-                lambda pp: api.loss(cfg, pp, batch))(p)
+            loss, g = grad_fn(p, batch)
             p, o = self.opt.update(g, o, p, s)
             return (p, o, s + 1), loss
 

@@ -14,8 +14,9 @@ Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 forward-only). Tests sweep shapes/dtypes and assert allclose vs ref.
 """
 from repro.kernels.otp_xor.ops import otp_xor_mac
-from repro.kernels.statevec_gate.ops import apply_gate
+from repro.kernels.statevec_gate.ops import apply_gate, apply_gate_layer
 from repro.kernels.swa_attention.ops import swa_attention
 from repro.kernels.ssd_scan.ops import ssd_scan
 
-__all__ = ["otp_xor_mac", "apply_gate", "swa_attention", "ssd_scan"]
+__all__ = ["otp_xor_mac", "apply_gate", "apply_gate_layer", "swa_attention",
+           "ssd_scan"]

@@ -1,7 +1,8 @@
 """Fused OTP-XOR + polynomial-MAC-partial Pallas kernel.
 
-One streaming pass over the parameter ciphertext: each grid step loads an
-(8, 128)-aligned uint32 tile of message and pad into VMEM, XORs them (the
+One streaming pass over the parameter ciphertext: each grid step loads a
+(128, 128)-aligned uint32 tile of message and pad into VMEM (the default —
+the block size is part of the wire format, see ops.py), XORs them (the
 OTP), splits the ciphertext words into 16-bit MAC symbols, multiplies by
 the per-position key powers (precomputed once per block offset — identical
 for every block), and reduces a per-block partial tag in GF(2^31 − 1).
@@ -52,14 +53,19 @@ def _mulmod(a, b):
 
 
 def _sum_mod_all(v):
-    """Modular reduction of a (R, C) tile to a scalar, log-depth."""
+    """Modular reduction of a (R, C) tile to a scalar in TWO plain sums.
+
+    Each term is < p = 2^31: split into 16-bit halves and sum each half
+    exactly in uint32 (lo ≤ n·(2^16−1), hi ≤ n·(2^15−1) — both < 2^32 for
+    n ≤ 2^16 words), then fold hi·2^16 back mod p. Replaces the old
+    log-depth pairwise-addmod tree: 2 vectorized reductions instead of
+    ~14 sequential halving steps.
+    """
     flat = v.reshape(-1)
-    n = flat.shape[0]
-    while n > 1:
-        half = n // 2
-        flat = _addmod(flat[:half], flat[half:n])
-        n = half
-    return flat[0]
+    assert flat.shape[0] <= (1 << 16), "tile too large for exact u32 sums"
+    s_lo = jnp.sum(flat & MASK16)
+    s_hi = jnp.sum(flat >> 16)
+    return _addmod(_mod31(s_lo), _mulmod(_mod31(s_hi), jnp.uint32(1 << 16)))
 
 
 def _otp_mac_kernel(msg_ref, pad_ref, pw_ref, ct_ref, tag_ref):
@@ -75,7 +81,7 @@ def _otp_mac_kernel(msg_ref, pad_ref, pw_ref, ct_ref, tag_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def otp_xor_mac_blocks(msg: jax.Array, pad: jax.Array, powers: jax.Array,
-                       block_rows: int = 8, interpret: bool = True):
+                       block_rows: int = 128, interpret: bool = True):
     """msg/pad (n_blocks, R, 128) uint32; powers (2, R, 128).
 
     Returns (ct same shape, tags (n_blocks,) uint32 partial MACs).

@@ -14,6 +14,17 @@ Two tiling regimes (chosen statically from q):
     (1, 2, T) spans both butterfly halves at matching lo-offsets.
 
 The gate's 8 real scalars ride in as a broadcast (1, 8) block.
+
+Tiling: the default tile is 8192 lanes (32 KB/plane — 4 planes in flight
+is still ≪ VMEM), so any state up to 13 qubits is ONE grid step; the old
+1024 default split a 12-qubit state into 4 steps and lost to the XLA
+reference on launch overhead alone.
+
+``apply_layer_planes`` is the fused-layer entry point: it consumes the
+same per-qubit gate tensor the fused simulator path builds — packed
+(nq, 8) — and runs ALL nq butterfly stages over a resident state block in
+one kernel (an in-VMEM FFT, one HBM round-trip for the whole layer
+instead of one per gate).
 """
 from __future__ import annotations
 
@@ -22,6 +33,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 8192
+# a whole statevector this size or smaller stays resident for a fused layer
+MAX_FUSED_DIM = 8192
 
 
 def _butterfly(g, a0r, a0i, a1r, a1i):
@@ -59,7 +74,7 @@ def _kernel_large(g_ref, xr_ref, xi_ref, or_ref, oi_ref):
 
 @functools.partial(jax.jit, static_argnames=("qubit", "tile", "interpret"))
 def apply_gate_planes(state_re: jax.Array, state_im: jax.Array,
-                      gate8: jax.Array, qubit: int, tile: int = 1024,
+                      gate8: jax.Array, qubit: int, tile: int = DEFAULT_TILE,
                       interpret: bool = True):
     """state planes (dim,) f32; gate8 (8,) f32 packed
     [g00r, g00i, g01r, g01i, g10r, g10i, g11r, g11i]."""
@@ -108,6 +123,60 @@ def apply_gate_planes(state_re: jax.Array, state_im: jax.Array,
             pl.BlockSpec((1, 2, T), lambda h, t: (h, 0, t)),
         ],
         out_shape=[jax.ShapeDtypeStruct((hi, 2, lo), jnp.float32)] * 2,
+        interpret=interpret,
+    )(g, xr, xi)
+    return outr.reshape(dim), outi.reshape(dim)
+
+
+def _kernel_fused_layer(g_ref, xr_ref, xi_ref, or_ref, oi_ref, *, nq: int):
+    """All nq butterfly stages over a fully-resident state block.
+
+    g_ref (nq, 8): stage q's packed gate. The state never leaves VMEM
+    between stages — the layer costs one HBM round-trip total.
+    """
+    xr = xr_ref[0]
+    xi = xi_ref[0]
+    for q in range(nq):                      # static unroll
+        lo = 1 << q
+        r2 = xr.reshape(-1, 2, lo)
+        i2 = xi.reshape(-1, 2, lo)
+        y0r, y0i, y1r, y1i = _butterfly(
+            g_ref[q], r2[:, 0], i2[:, 0], r2[:, 1], i2[:, 1])
+        xr = jnp.stack([y0r, y1r], axis=1).reshape(xr.shape)
+        xi = jnp.stack([y0i, y1i], axis=1).reshape(xi.shape)
+    or_ref[0] = xr
+    oi_ref[0] = xi
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_layer_planes(state_re: jax.Array, state_im: jax.Array,
+                       gates8: jax.Array, interpret: bool = True):
+    """Apply gate q to qubit q for ALL qubits in one kernel launch.
+
+    state planes (dim,) f32 with dim <= MAX_FUSED_DIM (the whole state must
+    sit in VMEM — larger states go gate-by-gate via apply_gate_planes);
+    gates8 (nq, 8) f32, the packed per-qubit gate tensor.
+    """
+    dim = state_re.shape[0]
+    nq = dim.bit_length() - 1
+    assert dim <= MAX_FUSED_DIM, (dim, MAX_FUSED_DIM)
+    assert gates8.shape == (nq, 8), gates8.shape
+    g = gates8.astype(jnp.float32)
+    xr = state_re.reshape(1, dim)
+    xi = state_im.reshape(1, dim)
+    outr, outi = pl.pallas_call(
+        functools.partial(_kernel_fused_layer, nq=nq),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((nq, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((1, dim), jnp.float32)] * 2,
         interpret=interpret,
     )(g, xr, xi)
     return outr.reshape(dim), outi.reshape(dim)

@@ -1,4 +1,4 @@
-"""Public wrapper for statevec_gate with a custom VJP.
+"""Public wrappers for statevec_gate with custom VJPs.
 
 ``apply_gate(state_complex, gate_2x2_complex, qubit)`` mirrors
 ``repro.quantum.statevector.apply_1q`` but runs the Pallas butterfly
@@ -6,6 +6,14 @@ kernel. Forward runs the kernel; backward applies the adjoint gate with
 the SAME kernel (the butterfly is its own transpose pattern) plus a small
 einsum for the gate cotangent — so VQC training can run end-to-end on the
 kernel path.
+
+``apply_gate_layer(state_complex, gates (nq, 2, 2))`` is the fused-layer
+entry point: it consumes the SAME per-qubit gate tensor the fused
+simulator path (``statevector.apply_1q_layer`` / ``vqc.layer_gates``)
+builds, and runs all nq stages in one kernel launch with the state
+resident in VMEM. Backward re-runs the differentiable per-gate oracle
+composition under ``jax.vjp`` (one extra reference forward — the layer is
+short, so recompute beats stashing nq intermediate states).
 """
 from __future__ import annotations
 
@@ -14,9 +22,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.statevec_gate.kernel import apply_gate_planes
+from repro.kernels.statevec_gate.kernel import (
+    MAX_FUSED_DIM, apply_gate_planes, apply_layer_planes,
+)
 from repro.kernels.statevec_gate.ref import (
-    adjoint_gate8, apply_gate_planes_ref, gate_grad,
+    adjoint_gate8, apply_gate_planes_ref, apply_layer_planes_ref, gate_grad,
 )
 
 
@@ -72,4 +82,58 @@ def apply_gate(state: jax.Array, gate: jax.Array, qubit: int,
     sr = state.real.astype(jnp.float32)
     si = state.imag.astype(jnp.float32)
     outr, outi = _apply_planes(sr, si, g8, qubit, interpret, use_kernel)
+    return (outr + 1j * outi).astype(jnp.complex64)
+
+
+# ---------------------------------------------------------------------------
+# fused layer
+# ---------------------------------------------------------------------------
+
+def _pack_gates(gates: jax.Array) -> jax.Array:
+    """(nq, 2, 2) complex -> (nq, 8) packed reals."""
+    g = gates.astype(jnp.complex64).reshape(gates.shape[0], 4)
+    return jnp.stack([g.real, g.imag], axis=-1).reshape(gates.shape[0], 8)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _apply_layer_planes(state_re, state_im, gates8, interpret, use_kernel):
+    if use_kernel and state_re.shape[0] <= MAX_FUSED_DIM:
+        return apply_layer_planes(state_re, state_im, gates8,
+                                  interpret=interpret)
+    if use_kernel:
+        # state too large to stay resident: gate-by-gate kernel sweeps
+        for q in range(gates8.shape[0]):
+            state_re, state_im = apply_gate_planes(
+                state_re, state_im, gates8[q], q, interpret=interpret)
+        return state_re, state_im
+    return apply_layer_planes_ref(state_re, state_im, gates8)
+
+
+def _layer_fwd(state_re, state_im, gates8, interpret, use_kernel):
+    out = _apply_layer_planes(state_re, state_im, gates8, interpret,
+                              use_kernel)
+    return out, (state_re, state_im, gates8)
+
+
+def _layer_bwd(interpret, use_kernel, res, cots):
+    state_re, state_im, gates8 = res
+    _, vjp = jax.vjp(apply_layer_planes_ref, state_re, state_im, gates8)
+    return vjp(cots)
+
+
+_apply_layer_planes.defvjp(_layer_fwd, _layer_bwd)
+
+
+def apply_gate_layer(state: jax.Array, gates: jax.Array,
+                     interpret: bool = True,
+                     use_kernel: bool = True) -> jax.Array:
+    """Apply gate q to qubit q for all nq qubits — one fused kernel launch.
+
+    state (2^nq,) complex; gates (nq, 2, 2) complex — the same per-qubit
+    gate tensor ``vqc.layer_gates`` emits (one layer's RZ·RY products).
+    """
+    g8 = _pack_gates(gates)
+    sr = state.real.astype(jnp.float32)
+    si = state.imag.astype(jnp.float32)
+    outr, outi = _apply_layer_planes(sr, si, g8, interpret, use_kernel)
     return (outr + 1j * outi).astype(jnp.complex64)

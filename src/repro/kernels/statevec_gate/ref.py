@@ -27,6 +27,16 @@ def apply_gate_planes_ref(state_re, state_im, gate8, qubit: int):
     return outr, outi
 
 
+def apply_layer_planes_ref(state_re, state_im, gates8):
+    """Oracle for the fused-layer kernel: gate q to qubit q, sequentially.
+    gates8 (nq, 8) packed like apply_gate_planes_ref's gate8."""
+    nq = gates8.shape[0]
+    for q in range(nq):
+        state_re, state_im = apply_gate_planes_ref(
+            state_re, state_im, gates8[q], q)
+    return state_re, state_im
+
+
 def adjoint_gate8(gate8):
     """Conjugate transpose in the 8-real packing."""
     g00r, g00i, g01r, g01i, g10r, g10i, g11r, g11i = [gate8[i] for i in range(8)]

@@ -18,6 +18,9 @@ class ModelApi(NamedTuple):
     init_cache: Callable      # (cfg, batch, cache_len) -> cache
     decode_step: Callable     # (cfg, params, cache, batch, ctx=None) -> (logits, cache)
     prefill_cross: Callable | None = None  # encdec/vlm: fill cross-KV cache
+    shift_grad: Callable | None = None     # hardware-faithful gradient rule:
+    #   (cfg, params, batch, chunk=0, with_loss=False) -> grads pytree,
+    #   or (loss, grads) with with_loss=True (VQC: parameter-shift)
 
 
 def _decoder_api() -> ModelApi:

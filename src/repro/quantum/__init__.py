@@ -7,21 +7,24 @@ gradient path). The TPU hot loop (gate application) has a Pallas kernel in
 ``repro.kernels.statevec_gate``; this package is the reference/driver layer.
 """
 from repro.quantum.statevector import (
-    init_state, apply_1q, apply_cz, apply_cnot, apply_h, apply_ry, apply_rz,
-    apply_u3, expect_z, probs, sample_measure, H, X, Z, ry_gate, rz_gate,
-    u3_gate,
+    init_state, apply_1q, apply_1q_layer, apply_cz, apply_cnot, apply_h,
+    apply_ry, apply_rz, apply_u3, expect_z, expect_z_all, probs, ring_cz_signs,
+    sample_measure, zexp_signs, H, X, Z, ry_gate, rz_gate, u3_gate,
 )
 from repro.quantum.vqc import (
-    vqc_init, vqc_logits, vqc_loss, vqc_api, parameter_shift_grad,
+    vqc_init, vqc_logits, vqc_loss, vqc_api, layer_gates, encoding_gates,
+    parameter_shift_grad, parameter_shift_grad_serial,
 )
 from repro.quantum.qkd import bb84_keygen, derive_pad_seed, qber_estimate
 from repro.quantum.teleport import teleport_state, teleport_params, fidelity
 
 __all__ = [
-    "init_state", "apply_1q", "apply_cz", "apply_cnot", "apply_h", "apply_ry",
-    "apply_rz", "apply_u3", "expect_z", "probs", "sample_measure",
+    "init_state", "apply_1q", "apply_1q_layer", "apply_cz", "apply_cnot",
+    "apply_h", "apply_ry", "apply_rz", "apply_u3", "expect_z", "expect_z_all",
+    "probs", "ring_cz_signs", "sample_measure", "zexp_signs",
     "H", "X", "Z", "ry_gate", "rz_gate", "u3_gate",
-    "vqc_init", "vqc_logits", "vqc_loss", "vqc_api", "parameter_shift_grad",
+    "vqc_init", "vqc_logits", "vqc_loss", "vqc_api", "layer_gates",
+    "encoding_gates", "parameter_shift_grad", "parameter_shift_grad_serial",
     "bb84_keygen", "derive_pad_seed", "qber_estimate",
     "teleport_state", "teleport_params", "fidelity",
 ]

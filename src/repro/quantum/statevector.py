@@ -12,10 +12,12 @@ these primitives.
 from __future__ import annotations
 
 import math
-from functools import partial
+import string
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 CDTYPE = jnp.complex64
 
@@ -135,6 +137,105 @@ def apply_controlled_1q(state, gate, control: int, target: int) -> jax.Array:
     mixed = g_tt * state + g_to * jnp.take(state, partner, axis=-1)
     cond = (_bit(idx, control) == 1)
     return jnp.where(cond, mixed, state)
+
+
+# ---------------------------------------------------------------------------
+# fused layer application (one contraction per qubit *group*, not per gate)
+# ---------------------------------------------------------------------------
+
+def group_1q_gates(gates: jax.Array, group: int = 2) -> list:
+    """Kron consecutive 1q gates into (2^g, 2^g) group gates.
+
+    gates (..., nq, 2, 2), gate q acting on qubit q. Returns a list, low
+    group first, of (..., 2^s, 2^s) arrays where group j covers qubits
+    [j·g, j·g + s) and the kron is ordered high-qubit-first (matching the
+    little-endian (2,)*nq reshape of a statevector).
+    """
+    nq = gates.shape[-3]
+    out = []
+    q = 0
+    while q < nq:
+        s = min(group, nq - q)
+        acc = gates[..., q, :, :]
+        for t in range(1, s):
+            hi = gates[..., q + t, :, :]
+            d = acc.shape[-1]
+            # kron(hi, acc): row (i_h, i_a), col (j_h, j_a)
+            acc = jnp.einsum("...hk,...ab->...hakb", hi, acc).reshape(
+                acc.shape[:-2] + (2 * d, 2 * d))
+        out.append(acc)
+        q += s
+    return out
+
+
+def apply_1q_layer(state: jax.Array, gates: jax.Array,
+                   group: int = 2) -> jax.Array:
+    """Apply gate q to qubit q for ALL qubits in one fused contraction.
+
+    gates (..., nq, 2, 2) broadcasts against the state's batch dims (shared
+    ansatz gates are (nq, 2, 2); per-sample encoding gates (B, nq, 2, 2)).
+    Consecutive qubits are kron-fused into 2^group-dim gates first — same
+    flops, 1/group the passes over the state — then a single multi-operand
+    einsum contracts every group gate with its state axis (opt_einsum picks
+    the pairwise order; XLA fuses the chain).
+    """
+    dim = state.shape[-1]
+    nq = dim.bit_length() - 1
+    assert gates.shape[-3] == nq, (gates.shape, nq)
+    grouped = group_1q_gates(gates.astype(state.dtype), group)
+    sizes = [g.shape[-1] for g in grouped]           # low group first
+    lead = state.shape[:-1]
+    # axis order of the reshaped state is high group first (little-endian)
+    st = state.reshape(lead + tuple(s for s in reversed(sizes)))
+    n_groups = len(sizes)
+    in_sub = string.ascii_lowercase[:n_groups]        # state axes, high->low
+    out_sub = string.ascii_uppercase[:n_groups]
+    gate_terms = []
+    for j in range(n_groups):                         # group j = axis n-1-j
+        k = n_groups - 1 - j
+        gate_terms.append("..." + out_sub[k] + in_sub[k])
+    eq = ",".join(gate_terms) + ",..." + in_sub + "->..." + out_sub
+    out = jnp.einsum(eq, *grouped, st)
+    return out.reshape(lead + (dim,))
+
+
+@lru_cache(maxsize=None)
+def _ring_cz_signs_np(nq: int) -> np.ndarray:
+    idx = np.arange(1 << nq)
+    count = np.zeros(idx.shape, np.int64)
+    for q in range(nq):
+        count += ((idx >> q) & 1) & ((idx >> ((q + 1) % nq)) & 1)
+    return np.where(count % 2 == 1, -1.0, 1.0).astype(np.float32)
+
+
+def ring_cz_signs(nq: int) -> jax.Array:
+    """±1 diagonal of the CZ entangler ring ∏_q CZ(q, q+1 mod nq).
+
+    CZs are diagonal and commute, so the whole ring is one static sign
+    vector: (-1)^(# adjacent 1-pairs). Computed host-side once per nq
+    (cached as numpy so a jit trace never captures another trace's array).
+    """
+    return jnp.asarray(_ring_cz_signs_np(nq))
+
+
+@lru_cache(maxsize=None)
+def _zexp_signs_np(nq: int, n_obs: int) -> np.ndarray:
+    idx = np.arange(1 << nq)
+    rows = [np.where((idx >> q) & 1 == 0, 1.0, -1.0) for q in range(n_obs)]
+    return np.stack(rows).astype(np.float32)
+
+
+def zexp_signs(nq: int, n_obs: int) -> jax.Array:
+    """(n_obs, 2^nq) ±1 matrix: row q is the ⟨Z_q⟩ sign vector, so the
+    stacked readout over the first n_obs qubits is one matmul over probs."""
+    return jnp.asarray(_zexp_signs_np(nq, n_obs))
+
+
+def expect_z_all(state: jax.Array, n_obs: int) -> jax.Array:
+    """Stacked ⟨Z_0..Z_{n_obs-1}⟩ via one (dim,) x (n_obs, dim) matmul.
+    state (..., 2^n) -> (..., n_obs)."""
+    nq = state.shape[-1].bit_length() - 1
+    return probs(state) @ zexp_signs(nq, n_obs).T
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,29 @@ def test_round_runs_and_synchronizes(fl_setup, mode, security):
     assert int(new_state.round_idx) == 1
 
 
+def test_param_shift_grad_method_close_to_autodiff(fl_setup):
+    """The paper-faithful parameter-shift rule trains the same model as
+    autodiff (the rule is exact for our Pauli-rotation ansatz)."""
+    cfg, api, opt, n, state, batches, mask, seeds = fl_setup
+    outs = {}
+    for gm in ("autodiff", "param_shift"):
+        fl = SatQFLConfig(mode="sim", local_steps=2, batch_size=8,
+                          grad_method=gm)
+        rf = jax.jit(make_fl_round(cfg, api, fl, opt, n, security="none"))
+        outs[gm], _ = rf(state, batches, mask, seeds)
+    for a, b in zip(jax.tree_util.tree_leaves(outs["autodiff"].params),
+                    jax.tree_util.tree_leaves(outs["param_shift"].params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_param_shift_requires_quantum_model(fl_setup):
+    cfg, api, opt, n, *_ = fl_setup
+    fl = SatQFLConfig(mode="sim", grad_method="param_shift")
+    classical = api._replace(shift_grad=None)
+    with pytest.raises(ValueError, match="shift_grad"):
+        make_fl_round(cfg, classical, fl, opt, n)
+
+
 def test_otp_bitexact_transparent(fl_setup):
     s_none, _ = _round(fl_setup, "sim", "none")
     s_otp, _ = _round(fl_setup, "sim", "otp")

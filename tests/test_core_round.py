@@ -8,6 +8,7 @@ from repro.constellation import build_trace
 from repro.core import CommModel, SatQFLConfig, SatQFLTrainer
 from repro.data import dirichlet_partition, make_statlog, server_split
 from repro.models import get_config, get_model
+from repro.quantum import vqc_logits, vqc_loss
 
 
 @pytest.fixture(scope="module")
@@ -38,6 +39,52 @@ def test_modes_run_and_evaluate(setup, mode):
         assert np.isfinite(m.server_val_loss)
         assert 0.0 <= m.server_val_acc <= 1.0
         assert m.comm_s > 0
+
+
+@pytest.mark.parametrize("mode", ["qfl", "sim", "seq", "async"])
+def test_fused_engine_metrics_match_per_gate(setup, mode):
+    """Acceptance: trainer metrics on every mode are unchanged (within
+    float tolerance) when the VQC evaluates on the fused pipeline instead
+    of the per-gate path it replaced."""
+    cfg, api, trace, sats, server = setup
+
+    def fwd_pg(c, p, b, ctx=None):
+        return (vqc_logits(c, p, b["features"], fused=False),
+                jnp.zeros((), jnp.float32))
+
+    def loss_pg(c, p, b, ctx=None):
+        return vqc_loss(c, p, b, ctx, fused=False)
+
+    api_pg = api._replace(forward=fwd_pg, loss=loss_pg)
+    fl = SatQFLConfig(n_rounds=2, local_steps=3, batch_size=8, mode=mode)
+    hists = []
+    for a in (api, api_pg):
+        tr = SatQFLTrainer(cfg, a, fl, trace, sats, server)
+        hists.append(tr.run())
+    for m_fused, m_pg in zip(*hists):
+        np.testing.assert_allclose(m_fused.server_val_loss,
+                                   m_pg.server_val_loss, atol=1e-4)
+        np.testing.assert_allclose(m_fused.server_val_acc,
+                                   m_pg.server_val_acc, atol=1e-3)
+        np.testing.assert_allclose(m_fused.server_test_acc,
+                                   m_pg.server_test_acc, atol=1e-3)
+        assert m_fused.comm_s == m_pg.comm_s
+
+
+def test_param_shift_trainer_matches_autodiff(setup):
+    """grad_method='param_shift' trains the same global model (the shift
+    rule is exact for the Pauli-rotation ansatz)."""
+    cfg, api, trace, sats, server = setup
+    runs = {}
+    for gm in ("autodiff", "param_shift"):
+        fl = SatQFLConfig(n_rounds=1, local_steps=2, batch_size=8,
+                          mode="sim", grad_method=gm)
+        tr = SatQFLTrainer(cfg, api, fl, trace, sats, server)
+        tr.run()
+        runs[gm] = tr.global_params
+    for a, b in zip(jax.tree_util.tree_leaves(runs["autodiff"]),
+                    jax.tree_util.tree_leaves(runs["param_shift"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
 
 
 def test_encryption_transparent(setup):

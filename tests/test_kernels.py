@@ -11,7 +11,9 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import apply_gate, otp_xor_mac, ssd_scan, swa_attention
+from repro.kernels import (apply_gate, apply_gate_layer, otp_xor_mac,
+                           ssd_scan, swa_attention)
+from repro.kernels.otp_xor.ops import DEFAULT_BLOCK_ROWS
 from repro.kernels.otp_xor.ref import otp_xor_mac_ref
 from repro.kernels.swa_attention.ops import _fold, _repeat_kv, _unfold
 from repro.kernels.swa_attention.ref import swa_attention_ref
@@ -30,7 +32,7 @@ def test_otp_xor_mac_matches_ref(n, rk, sk):
     msg = jax.random.bits(key, (n,), jnp.uint32)
     pad = jax.random.bits(jax.random.fold_in(key, 1), (n,), jnp.uint32)
     ct, tag = otp_xor_mac(msg, pad, jnp.uint32(rk), jnp.uint32(sk))
-    wpb = 1024
+    wpb = DEFAULT_BLOCK_ROWS * 128
     nb = max((n + wpb - 1) // wpb, 1)
     msgp = jnp.zeros((nb * wpb,), jnp.uint32).at[:n].set(msg)
     padp = jnp.zeros((nb * wpb,), jnp.uint32).at[:n].set(pad)
@@ -83,6 +85,24 @@ def test_statevec_gate_vjp_matches_sim():
     gk = jax.grad(loss_k)(0.7)
     gr = jax.grad(loss_r)(0.7)
     assert abs(float(gk) - float(gr)) < 1e-5
+
+
+@given(st.integers(2, 11), st.integers(0, 30))
+@settings(max_examples=12)
+def test_statevec_fused_layer_matches_sim(nq, seed):
+    """apply_gate_layer (one launch, all qubits) == sequential apply_1q."""
+    key = jax.random.PRNGKey(seed)
+    re, im = jax.random.normal(key, (2, 2 ** nq))
+    state = (re + 1j * im).astype(jnp.complex64)
+    state = state / jnp.linalg.norm(state)
+    angles = jax.random.uniform(jax.random.fold_in(key, 1), (3, nq),
+                                minval=-3.0, maxval=3.0)
+    gates = sv.u3_gate(angles[0], angles[1], angles[2])
+    got = apply_gate_layer(state, gates)
+    want = state
+    for q in range(nq):
+        want = sv.apply_1q(want, gates[q], q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
 
 
 # ---------------------------------------------------------------------------

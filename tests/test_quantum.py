@@ -9,10 +9,12 @@ from hypothesis import given, strategies as st
 
 from repro.models import get_config
 from repro.quantum import (
-    apply_cnot, apply_cz, apply_h, apply_ry, apply_rz, apply_u3, bb84_keygen,
-    expect_z, init_state, probs, sample_measure, teleport_params,
-    teleport_state, vqc_init, vqc_logits, vqc_loss, parameter_shift_grad,
+    apply_cnot, apply_cz, apply_h, apply_ry, apply_rz, apply_u3,
+    apply_1q_layer, bb84_keygen, expect_z, init_state, probs, ring_cz_signs,
+    sample_measure, teleport_params, teleport_state, vqc_init, vqc_logits,
+    vqc_loss, parameter_shift_grad,
 )
+from repro.quantum import statevector as sv
 from repro.quantum.statevector import measure_qubit
 from repro.quantum.teleport import decode_state, u3_col, fidelity
 
@@ -63,6 +65,41 @@ def test_sampling_distribution(rng_key):
     s = sample_measure(rng_key, state, 4000)
     frac0 = float(jnp.mean((s == 0).astype(jnp.float32)))
     assert abs(frac0 - 0.75) < 0.03
+
+
+# --- fused evaluation engine ------------------------------------------------
+
+@given(st.integers(2, 8), st.integers(1, 3), st.integers(1, 4), st.integers(0, 50))
+@settings(max_examples=15)
+def test_fused_layer_matches_per_gate(nq, group, b, seed):
+    """apply_1q_layer (kron-grouped one-shot contraction) == sequential
+    apply_1q, for random per-qubit gates on random batched states."""
+    key = jax.random.PRNGKey(seed)
+    re, im = jax.random.normal(key, (2, b, 2 ** nq))
+    state = (re + 1j * im).astype(jnp.complex64)
+    state = state / jnp.linalg.norm(state, axis=-1, keepdims=True)
+    angles = jax.random.uniform(jax.random.fold_in(key, 1), (3, nq),
+                                minval=-3.0, maxval=3.0)
+    gates = sv.u3_gate(angles[0], angles[1], angles[2])     # (nq, 2, 2)
+    got = apply_1q_layer(state, gates, group=group)
+    want = state
+    for q in range(nq):
+        want = sv.apply_1q(want, gates[q], q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@given(st.integers(2, 9), st.integers(0, 50))
+@settings(max_examples=10)
+def test_ring_diagonal_matches_cz_ring(nq, seed):
+    key = jax.random.PRNGKey(seed)
+    re, im = jax.random.normal(key, (2, 2 ** nq))
+    state = (re + 1j * im).astype(jnp.complex64)
+    state = state / jnp.linalg.norm(state)
+    want = state
+    for q in range(nq):
+        want = apply_cz(want, q, (q + 1) % nq)
+    got = state * ring_cz_signs(nq).astype(jnp.complex64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-7)
 
 
 # --- VQC --------------------------------------------------------------------
