@@ -38,9 +38,12 @@ def bench_gate(nq=14):
             "ref_us": time_call(f_r, state, iters=9), "qubits": nq}
 
 
-def bench_gate_layer(nq=12):
-    """Fused-layer kernel (all nq gates, one launch, state resident) vs the
-    per-gate kernel composition it replaces."""
+def bench_gate_layer(nq=12, iters=9):
+    """Fused-layer kernel (butterfly stages fused, state resident or tiled
+    per qubit group) vs the per-gate kernel composition it replaces. The
+    entry records which execution plan ran (resident / tiled / per-gate) —
+    a silent fallback would show up here instead of hiding."""
+    from repro.kernels.statevec_gate.ops import LAYER_DEBUG, layer_plan
     key = jax.random.key(4)
     re, im = jax.random.normal(key, (2, 2 ** nq))
     state = ((re + 1j * im) / jnp.linalg.norm(re + 1j * im)).astype(jnp.complex64)
@@ -54,8 +57,11 @@ def bench_gate_layer(nq=12):
 
     f_k = jax.jit(lambda s: apply_gate_layer(s, gates))
     f_p = jax.jit(pergate)
-    return {"kernel_us": time_call(f_k, state, iters=9),
-            "ref_us": time_call(f_p, state, iters=9), "qubits": nq}
+    us_k = time_call(f_k, state, iters=iters, warmup=1)
+    path = LAYER_DEBUG.get("path", layer_plan(2 ** nq))
+    return {"kernel_us": us_k,
+            "ref_us": time_call(f_p, state, iters=iters, warmup=1),
+            "qubits": nq, "path": path}
 
 
 def bench_swa(S=512, W=128):
@@ -67,8 +73,8 @@ def bench_swa(S=512, W=128):
     from repro.kernels.swa_attention.ops import _fold, _unfold
     f_r = jax.jit(lambda a, b, c: _unfold(
         swa_attention_ref(_fold(a), _fold(b), _fold(c), window=W), 2, 4))
-    return {"kernel_us": time_call(f_k, q, k, v, iters=3),
-            "ref_us": time_call(f_r, q, k, v, iters=3), "S": S, "W": W}
+    return {"kernel_us": time_call(f_k, q, k, v, iters=9),
+            "ref_us": time_call(f_r, q, k, v, iters=9), "S": S, "W": W}
 
 
 def bench_ssd(S=512):
@@ -81,12 +87,13 @@ def bench_ssd(S=512):
     Cv = 0.3 * jax.random.normal(jax.random.fold_in(key, 4), (1, S, 1, 32))
     f_k = jax.jit(lambda *a: ssd_scan(*a, chunk=128))
     f_r = jax.jit(lambda *a: ssd_ref(*a, chunk=128))
-    return {"kernel_us": time_call(f_k, x, dt, A, Bv, Cv, iters=3),
-            "ref_us": time_call(f_r, x, dt, A, Bv, Cv, iters=3), "S": S}
+    return {"kernel_us": time_call(f_k, x, dt, A, Bv, Cv, iters=9),
+            "ref_us": time_call(f_r, x, dt, A, Bv, Cv, iters=9), "S": S}
 
 
 def quick():
     out = {"otp": bench_otp(16384), "gate": bench_gate(12),
            "gate_layer": bench_gate_layer(12),
+           "gate_layer_20q": bench_gate_layer(20, iters=3),
            "swa": bench_swa(256, 64), "ssd": bench_ssd(256)}
     return out, "interpret-mode"

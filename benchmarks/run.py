@@ -33,8 +33,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_comm, bench_constellation,
-                            bench_frameworks, bench_kernels, bench_security,
-                            bench_vqc, roofline)
+                            bench_frameworks, bench_kernels, bench_round,
+                            bench_security, bench_vqc, roofline)
 
     if args.full:
         benches = {
@@ -51,6 +51,7 @@ def main(argv=None):
             "constellation": lambda: (bench_constellation.scenario(), ""),
             "kernels": bench_kernels.quick,
             "vqc": bench_vqc.quick,
+            "round": bench_round.quick,
             "roofline": roofline.quick,
         }
     else:
@@ -61,6 +62,7 @@ def main(argv=None):
             "constellation": bench_constellation.quick,
             "kernels": bench_kernels.quick,
             "vqc": bench_vqc.quick,
+            "round": bench_round.quick,
             "roofline": roofline.quick,
         }
 

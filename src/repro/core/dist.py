@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flconfig import SatQFLConfig
-from repro.core.gradients import make_grad_fn
+from repro.core.localtrain import make_local_train
 from repro.nn.optim import Optimizer
 from repro.sharding.context import DistCtx
 
@@ -181,19 +181,10 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
                          "'sim' schedule; use 'otp' for seq/async")
     exchange = make_secure_exchange(security)
 
-    grad_fn = make_grad_fn(api, model_cfg, fl)
-
-    def local_train(params, slots, batches, step0):
-        """E local SGD steps on one satellite (vmapped over the sat axis)."""
-        def body(carry, batch):
-            p, o, s = carry
-            loss, g = grad_fn(p, batch)
-            p, o = optimizer.update(g, o, p, s)
-            return (p, o, s + 1), loss
-
-        (p, o, _), losses = jax.lax.scan(body, (params, slots, step0), batches)
-        return p, o, jnp.mean(losses)
-
+    # the per-satellite local-training program is the SAME one the host
+    # engine's batched executor vmaps (repro.core.localtrain) — this engine
+    # simply puts the stacked-satellite axis in front of it
+    local_train = make_local_train(api, model_cfg, fl, optimizer)
     vtrain = jax.vmap(local_train, in_axes=(0, 0, 0, None))
 
     def _hop_batches(batches, hop):

@@ -1,0 +1,90 @@
+"""The local-training program shared by BOTH FL engines.
+
+One satellite's local update is E SGD steps — grad rule (autodiff or the
+vectorized parameter-shift rule, via ``make_grad_fn``) plus the optimizer
+step — scanned over E pre-sampled batches. ``make_local_train`` builds that
+program once; the engines differ only in how they put a *client axis* in
+front of it:
+
+  * ``repro.core.dist``  vmaps it over the stacked-satellite leading axis
+    (the in-graph mesh engine — batches arrive pre-stacked);
+  * ``repro.core.round`` vmaps it over the participating clients of a
+    round (the host engine's ``batched=True`` executor) or calls it one
+    client at a time (``batched=False``, the numerics oracle).
+
+Both the batched executor and the per-client oracle sample their batches
+through ``sample_batch_bounded`` with the SAME per-step keys, so the two
+paths see bit-identical data and parity is a float-accumulation question
+(≤ 1e-6), not a data-stream question. The bound ``n`` may be a traced
+per-client scalar: client datasets are padded to a shared length and the
+true length rides along, which keeps every client the same shape (one
+compile) while sampling exactly the indices the unpadded data would.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gradients import make_grad_fn
+
+
+def sample_batch_bounded(data: dict, key, batch_size: int, n) -> dict:
+    """Uniform batch from the first ``n`` rows of (possibly padded) data.
+
+    ``n`` may be a python int or a traced scalar — jax.random.randint
+    draws the same indices either way, which is what makes the padded
+    batched path bit-identical to the unpadded per-client one.
+    """
+    idx = jax.random.randint(key, (batch_size,), 0, n)
+    return {k: v[idx] for k, v in data.items()}
+
+
+def sample_local_batches(data: dict, key, batch_size: int, n, local_steps: int):
+    """Pre-sample all E step batches: leaves (E, batch, ...)."""
+    keys = jax.random.split(key, local_steps)
+    return jax.vmap(lambda k: sample_batch_bounded(data, k, batch_size, n))(keys)
+
+
+def make_local_train(api, model_cfg, fl, optimizer):
+    """(params, opt_state, batches, step0) -> (params, opt_state, mean_loss).
+
+    batches: pytree with leaves (E, batch, ...) — E local steps, scanned.
+    """
+    grad_fn = make_grad_fn(api, model_cfg, fl)
+
+    def local_train(params, opt_state, batches, step0):
+        def body(carry, batch):
+            p, o, s = carry
+            loss, g = grad_fn(p, batch)
+            p, o = optimizer.update(g, o, p, s)
+            return (p, o, s + 1), loss
+
+        (p, o, _), losses = jax.lax.scan(body, (params, opt_state, step0),
+                                         batches)
+        return p, o, jnp.mean(losses)
+
+    return local_train
+
+
+def make_batched_local_train(api, model_cfg, fl, optimizer):
+    """The constellation-batched local-training program.
+
+    (params (K,...), opt_states (K,...), data (K, n_max, ...), n (K,),
+     keys (K,), step0 scalar) -> (params (K,...), opt_states (K,...),
+     losses (K,))
+
+    Sampling AND training run under one client vmap, so a K-satellite
+    round is one compiled dispatch instead of K.
+    """
+    local_train = make_local_train(api, model_cfg, fl, optimizer)
+
+    def batched(params, opt_states, data, n, keys, step0):
+        def client(p, o, d, nn, k):
+            batches = sample_local_batches(d, k, fl.batch_size, nn,
+                                           fl.local_steps)
+            return local_train(p, o, batches, step0)
+
+        return jax.vmap(client, in_axes=(0, 0, 0, 0, 0))(
+            params, opt_states, data, n, keys)
+
+    return batched

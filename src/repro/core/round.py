@@ -7,9 +7,24 @@ come from the constellation trace; exchanges are optionally secured with
 QKD-keyed OTP (+MAC), Fernet-lite control tokens, or teleportation of
 (θ, φ) pairs; the communication-time model accounts every transfer.
 
-The jit boundary is the per-satellite local training function (shared
-shapes => compiled once); orchestration is Python, as in the paper's
-implementation — the mesh-scale in-graph version lives in ``repro.core.dist``.
+**Constellation-batched execution (default).** Local training is the hot
+path, and with the per-client loop a round costs one jitted dispatch per
+satellite — wall-clock linear in constellation size even though each
+client is fast. ``batched=True`` stacks every participating client's
+parameters, optimizer slots, and (padded) data along a leading client
+axis and runs local training as ONE vmapped-and-jitted program per group
+stage (``repro.core.localtrain`` — the same program ``repro.core.dist``
+vmaps at mesh scale): a 32-satellite round is one compiled dispatch, not
+32. Aggregation is a weighted reduction over the stacked axis; the
+communication/security accounting is unchanged (and bit-identical) —
+security modes run Algorithm 2 per edge exactly as before.
+
+``batched=False`` keeps the per-client loop as the numerics oracle; both
+paths draw per-(round, satellite) keys from the same fold-in schedule and
+sample through the same bounded sampler, so they see identical data and
+agree to float-accumulation tolerance (tests enforce ≤ 1e-6 on metrics,
+exact equality on comm accounting). A custom ``sample_batch`` (whose
+signature has no padding bound) forces the per-client path.
 """
 from __future__ import annotations
 
@@ -22,7 +37,10 @@ import numpy as np
 from repro.constellation.topology import ConstellationTrace
 from repro.core.comm import CommLog, CommModel
 from repro.core.flconfig import SatQFLConfig
-from repro.core.gradients import make_grad_fn
+from repro.core.localtrain import (
+    make_batched_local_train, make_local_train, sample_batch_bounded,
+    sample_local_batches,
+)
 from repro.core.plan import RoundPlan, compile_round_plan
 from repro.nn.optim import get_optimizer, inv_sqrt_schedule, constant_schedule
 from repro.nn.pytree import tree_bytes, tree_weighted_sum
@@ -33,9 +51,10 @@ from repro.quantum.teleport import teleport_params
 
 
 def default_sample_batch(data: dict, key, batch_size: int) -> dict:
-    n = next(iter(data.values())).shape[0]
-    idx = jax.random.randint(key, (batch_size,), 0, n)
-    return {k: v[idx] for k, v in data.items()}
+    # one sampling implementation repo-wide: the batched/oracle parity
+    # contract depends on both paths drawing identical indices
+    return sample_batch_bounded(data, key, batch_size,
+                                next(iter(data.values())).shape[0])
 
 
 def evaluate(api, model_cfg, params, batch) -> tuple[float, float]:
@@ -48,6 +67,10 @@ def evaluate(api, model_cfg, params, batch) -> tuple[float, float]:
     loss = jnp.mean(lse - ll)
     acc = jnp.mean((jnp.argmax(lf, -1) == labels).astype(jnp.float32))
     return float(loss), float(acc)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
 
 
 @dataclass
@@ -72,7 +95,8 @@ class SatQFLTrainer:
                  trace: ConstellationTrace, sat_data: list,
                  server_data: dict, comm: CommModel | None = None,
                  sample_batch=default_sample_batch,
-                 eavesdrop_edges: frozenset = frozenset()):
+                 eavesdrop_edges: frozenset = frozenset(),
+                 batched: bool = True):
         self.model_cfg = model_cfg
         self.api = api
         self.fl = fl
@@ -83,17 +107,52 @@ class SatQFLTrainer:
         self.sample_batch = sample_batch
         self.n_sats = trace.n_sats
         assert len(sat_data) == self.n_sats
+        self._custom_sampler = sample_batch is not default_sample_batch
+        # the batched executor samples through the bounded default sampler;
+        # a custom sampler has no padding contract -> per-client oracle
+        self.batched = batched and not self._custom_sampler
+        # every batched dispatch is padded to ONE fixed frame so each mode
+        # compiles exactly one stage program, however the trace reshuffles
+        # groups round to round (pad rows train throwaway copies and
+        # scatter into the scratch slot row)
+        self._frame = _next_pow2(self.n_sats)
 
         key = jax.random.PRNGKey(fl.seed)
         self.key, init_key = jax.random.split(key)
+        # local-training randomness is a pure function of (round, satellite)
+        # so the batched executor and the per-client oracle draw IDENTICAL
+        # batch streams regardless of dispatch order
+        self._train_key = jax.random.fold_in(jax.random.PRNGKey(fl.seed),
+                                             0x5A7)
         self.global_params = api.init(model_cfg, init_key)
+        self._row_nbytes = tree_bytes(self.global_params)
 
         sched = (inv_sqrt_schedule(fl.lr, warmup=0)
                  if fl.lr_schedule == "inv_sqrt" else constant_schedule(fl.lr))
         self.opt = get_optimizer(fl.optimizer, sched)
         self.opt_states = [self.opt.init(self.global_params)
                            for _ in range(self.n_sats)]
-        self.global_step = 0
+        # batched path keeps optimizer slots stacked (row i = satellite i);
+        # row n_sats is a scratch row that absorbs the writes of padding /
+        # masked-out dispatch rows, so the in-graph scatter needs no
+        # host-side row selection
+        self._opt_stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (self.n_sats + 1,) + x.shape),
+            self.opt.init(self.global_params))
+
+        # every client padded to one shared length (single compile for all
+        # satellites on BOTH paths); the true length rides along so the
+        # bounded sampler draws exactly the unpadded indices
+        counts = [len(next(iter(d.values()))) for d in sat_data]
+        max_n = max(counts)
+        self._n_samples = jnp.asarray(counts, jnp.int32)
+        self._data_stacked = {
+            k: jnp.stack([
+                jnp.concatenate([d[k], jnp.zeros((max_n - c,) + d[k].shape[1:],
+                                                 d[k].dtype)])
+                if c < max_n else d[k]
+                for d, c in zip(sat_data, counts)])
+            for k in sat_data[0]}
 
         self.keymgr = KeyManager(jax.random.PRNGKey(fl.seed + 7),
                                  n_qkd_bits=fl.qkd_bits,
@@ -103,42 +162,109 @@ class SatQFLTrainer:
         self.log = CommLog()
         self.history: list[RoundMetrics] = []
 
+        self._local_train = make_local_train(api, model_cfg, fl, self.opt)
         self._jit_local = jax.jit(self._local_train_impl)
+        self._batched_train = make_batched_local_train(api, model_cfg, fl,
+                                                       self.opt)
+        self._jit_stage = jax.jit(self._batched_stage_impl)
         # the whole schedule — roles, assignments, participation, window
         # waits, FedAvg weights — is compiled from the trace once up front;
         # no seed schedule: this engine derives pads live from the
         # KeyManager inside _exchange (QBER/abort semantics need it)
         self.plan: RoundPlan = compile_round_plan(
             trace, fl,
-            sample_counts=[len(next(iter(d.values()))) for d in sat_data],
+            sample_counts=counts,
             with_seeds=False)
 
     # ------------------------------------------------------------------
-    # local training (jitted once; shapes shared across satellites)
+    # local training
     # ------------------------------------------------------------------
-    def _local_train_impl(self, params, opt_state, data, key, step0):
-        fl, api, cfg = self.fl, self.api, self.model_cfg
-        grad_fn = make_grad_fn(api, cfg, fl)
+    def _sat_key(self, r: int, sat: int):
+        return jax.random.fold_in(jax.random.fold_in(self._train_key, r), sat)
 
-        def body(carry, k):
-            p, o, s = carry
-            batch = self.sample_batch(data, k, fl.batch_size)
-            loss, g = grad_fn(p, batch)
-            p, o = self.opt.update(g, o, p, s)
-            return (p, o, s + 1), loss
+    def _step0(self, r: int):
+        # every satellite sits at the same schedule point within a round
+        # (the paper's η_t ∝ 1/√t counts ROUNDS of local epochs, not an
+        # arbitrary client visiting order)
+        return jnp.asarray(r * self.fl.local_steps, jnp.int32)
 
-        keys = jax.random.split(key, fl.local_steps)
-        (p, o, s), losses = jax.lax.scan(body, (params, opt_state, step0), keys)
-        return p, o, jnp.mean(losses)
+    def _local_train_impl(self, params, opt_state, data, n, key, step0):
+        """Per-client oracle: pre-sample E batches, run the shared program."""
+        fl = self.fl
+        if self._custom_sampler:
+            keys = jax.random.split(key, fl.local_steps)
+            batches = jax.vmap(
+                lambda k: self.sample_batch(data, k, fl.batch_size))(keys)
+        else:
+            batches = sample_local_batches(data, key, fl.batch_size, n,
+                                           fl.local_steps)
+        return self._local_train(params, opt_state, batches, step0)
 
-    def _train_sat(self, sat: int, params):
-        self.key, k = jax.random.split(self.key)
-        p, o, loss = self._jit_local(params, self.opt_states[sat],
-                                     self.sat_data[sat], k,
-                                     jnp.asarray(self.global_step, jnp.int32))
+    def _train_sat(self, sat: int, params, r: int):
+        if self._custom_sampler:
+            data, n = self.sat_data[sat], jnp.asarray(0, jnp.int32)
+        else:
+            data = {k: v[sat] for k, v in self._data_stacked.items()}
+            n = self._n_samples[sat]
+        p, o, loss = self._jit_local(params, self.opt_states[sat], data, n,
+                                     self._sat_key(r, sat), self._step0(r))
         self.opt_states[sat] = o
-        self.global_step += self.fl.local_steps
         return p, float(loss)
+
+    # ------------------------------------------------------------------
+    # batched local training: one dispatch per client group
+    # ------------------------------------------------------------------
+    def _broadcast_global(self, k: int):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (k,) + x.shape), self.global_params)
+
+    def _batched_stage_impl(self, params, opt_stacked, data, n_all, ids,
+                            scatter_ids, r):
+        """One jit-compiled group stage: key derivation, slot/data gather,
+        K vmapped local trainings, and the masked optimizer-slot scatter —
+        zero host round-trips per stage."""
+        fl = self.fl
+        rk = jax.random.fold_in(self._train_key, r)
+        keys = jax.vmap(lambda s: jax.random.fold_in(rk, s))(ids)
+        slots = jax.tree_util.tree_map(lambda x: x[ids], opt_stacked)
+        data_k = {kk: v[ids] for kk, v in data.items()}
+        n = n_all[ids]
+        step0 = (r * fl.local_steps).astype(jnp.int32)
+        p, o, losses = self._batched_train(params, slots, data_k, n, keys,
+                                           step0)
+        # masked rows scatter into the scratch row (index n_sats) — real
+        # rows have distinct ids, so the scatter is conflict-free
+        new_opt = jax.tree_util.tree_map(
+            lambda full, new: full.at[scatter_ids].set(new), opt_stacked, o)
+        return p, new_opt, losses
+
+    def _train_group_batched(self, sat_ids: list[int], params_stacked, r: int,
+                             update_opt=None, pad_to: int | None = None):
+        """Train ``sat_ids`` in ONE vmapped dispatch.
+
+        params_stacked: leaves (K or Kp, ...) — row j holds sat_ids[j]'s
+        input model. Returns (params (Kp, ...), losses (Kp,)) — PADDED to
+        ``pad_to`` (default: next power of two), so every downstream
+        reduction sees bucket-stable shapes and the op/jit caches hold
+        O(log n_sats) entries across a whole trace instead of recompiling
+        per round. Rows where ``update_opt`` is False (seq-mode chain
+        padding) and pad rows leave their optimizer slots untouched.
+        """
+        k = len(sat_ids)
+        kp = pad_to or self._frame
+        ids = np.asarray(list(sat_ids) + [sat_ids[0]] * (kp - k))
+        upd = np.asarray(([True] * k if update_opt is None
+                          else list(update_opt)) + [False] * (kp - k))
+        params = jax.tree_util.tree_map(
+            lambda x: jnp.concatenate(
+                [x, jnp.broadcast_to(x[:1], (kp - x.shape[0],)
+                                     + x.shape[1:])])
+            if x.shape[0] < kp else x, params_stacked)
+        p, self._opt_stacked, losses = self._jit_stage(
+            params, self._opt_stacked, self._data_stacked, self._n_samples,
+            jnp.asarray(ids), jnp.asarray(np.where(upd, ids, self.n_sats)),
+            jnp.asarray(r, jnp.int32))
+        return p, losses
 
     # ------------------------------------------------------------------
     # secure exchange (Algorithm 2) — returns params as seen by receiver
@@ -202,6 +328,41 @@ class SatQFLTrainer:
             return params, t
         raise ValueError(fl.security)
 
+    def _exchange_rows(self, stacked, ids: list[int], edges: list[tuple],
+                       r: int, link: str, concurrents=None):
+        """Per-row Algorithm-2 exchange over a stacked (K, ...) tree.
+
+        security='none' never touches the tensors — accounting only (the
+        stacked aggregate stays on device, zero host round-trips). Other
+        modes run the full per-edge exchange on row slices so QKD
+        establishment, QBER aborts, MAC checks and timing are identical to
+        the per-client loop.
+        """
+        k = len(ids)
+        conc = concurrents or [1] * k
+        walls = []
+        if self.fl.security == "none":
+            for c in conc:
+                t = (self.comm.isl_transfer(self._row_nbytes, c)
+                     if link == "isl"
+                     else self.comm.feeder_transfer(self._row_nbytes, c))
+                self.log.count_transfer(self._row_nbytes)
+                walls.append(t)
+            return stacked, walls
+        rows = []
+        for j, (edge, c) in enumerate(zip(edges, conc)):
+            p_j = jax.tree_util.tree_map(lambda x: x[j], stacked)
+            p_j, t = self._exchange(p_j, edge, r, link, c)
+            rows.append(p_j)
+            walls.append(t)
+        # one restack (+ pad-row carry-over), not one full-tree copy per row
+        exchanged = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rows)
+        stacked = jax.tree_util.tree_map(
+            lambda ex, full: (jnp.concatenate([ex, full[k:]])
+                              if full.shape[0] > k else ex),
+            exchanged, stacked)
+        return stacked, walls
+
     # ------------------------------------------------------------------
     # shared aggregation + accounting helpers (all schedulers use these)
     # ------------------------------------------------------------------
@@ -213,16 +374,25 @@ class SatQFLTrainer:
         wsum = sum(ws)
         return tree_weighted_sum(models, [w / wsum for w in ws])
 
+    def _wmean_rows(self, stacked, w):
+        """Weighted mean over the stacked client axis (fp32 accumulate)."""
+        wn = jnp.asarray(w, jnp.float32)
+        wn = wn / jnp.maximum(jnp.sum(wn), 1e-9)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.tensordot(wn, x.astype(jnp.float32),
+                                    axes=(0, 0)).astype(x.dtype), stacked)
+
     # ------------------------------------------------------------------
-    # per-mode group schedulers — each merges one {main: secs} group and
-    # returns (merged_params, group_wall_s, group_wait_s, delivered_count)
+    # per-mode group schedulers (per-client oracle) — each merges one
+    # {main: secs} group and returns
+    # (merged_params, group_wall_s, group_wait_s, delivered_count)
     # ------------------------------------------------------------------
     def _merge_seq(self, r: int, main: int, secs: list):
         # the chain is SERIAL: wall = sum of hop transfers
         theta = self.global_params
         chain_wall = 0.0
         for s in secs:
-            theta, _ = self._train_sat(s, theta)
+            theta, _ = self._train_sat(s, theta, r)
             theta, t = self._exchange(theta, (s, main), r, "isl")
             chain_wall += t
         return theta, chain_wall, 0.0, len(secs)
@@ -232,7 +402,7 @@ class SatQFLTrainer:
         # (bandwidth / n_concurrent): wall = max over secs
         collected, ws, up_walls = [], [], [0.0]
         for s in secs:
-            p, _ = self._train_sat(s, self.global_params)
+            p, _ = self._train_sat(s, self.global_params, r)
             p, t = self._exchange(p, (s, main), r, "isl",
                                   concurrent=max(len(secs), 1))
             up_walls.append(t)
@@ -246,7 +416,7 @@ class SatQFLTrainer:
         q = self.pending.setdefault(main, [])
         up_walls, waits = [0.0], [0.0]
         for s in secs:
-            p, _ = self._train_sat(s, self.global_params)
+            p, _ = self._train_sat(s, self.global_params, r)
             wait = float(self.plan.window_wait_s[r, s])
             if not np.isfinite(wait):
                 continue                    # no window in trace: update dropped
@@ -270,14 +440,153 @@ class SatQFLTrainer:
                          "async": _merge_async}
 
     # ------------------------------------------------------------------
+    # per-mode group schedulers (constellation-batched executor) — each
+    # returns (merged_stacked (n_mains, ...), group_walls, group_waits,
+    # delivered_count), one vmapped dispatch per stage
+    # ------------------------------------------------------------------
+    def _merge_sim_batched(self, r: int, mains: list, groups: dict,
+                           mp: int):
+        secs_all = [s for m in mains for s in groups[m]]
+        group_walls = [0.0] * len(mains)
+        if not secs_all:
+            return self._broadcast_global(mp), group_walls, [0.0], 0
+        sp = self._frame
+        p, _ = self._train_group_batched(
+            secs_all, self._broadcast_global(sp), r)
+        conc = [max(len(groups[m]), 1) for m in mains for _ in groups[m]]
+        edges = [(s, m) for m in mains for s in groups[m]]
+        p, walls = self._exchange_rows(p, secs_all, edges, r, "isl", conc)
+        # masked weighted group reduction over the stacked client axis
+        # (padded to bucket shapes so the reduction compiles once per
+        # bucket, not once per round)
+        a = np.zeros((mp, sp), np.float32)
+        j = 0
+        for g, m in enumerate(mains):
+            for s in groups[m]:
+                a[g, j] = self._weight_of(s)
+                group_walls[g] = max(group_walls[g], walls[j])
+                j += 1
+        row_sum = a.sum(axis=1, keepdims=True)
+        empty = row_sum[:, 0] == 0
+        an = jnp.asarray(a / np.where(row_sum > 0, row_sum, 1.0))
+        keep = jnp.asarray(empty)
+
+        def _merge(x, g):
+            m = jnp.tensordot(an, x.astype(jnp.float32), axes=(1, 0))
+            k = keep.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.where(k, g.astype(jnp.float32), m).astype(x.dtype)
+
+        merged = jax.tree_util.tree_map(_merge, p, self._broadcast_global(mp))
+        return merged, group_walls, [0.0], len(secs_all)
+
+    def _merge_async_batched(self, r: int, mains: list, groups: dict,
+                             mp: int):
+        secs_all = [s for m in mains for s in groups[m]]
+        if secs_all:
+            p, _ = self._train_group_batched(
+                secs_all, self._broadcast_global(self._frame), r)
+        group_walls, group_waits = [0.0] * len(mains), [0.0] * len(mains)
+        j = 0
+        for g, m in enumerate(mains):
+            q = self.pending.setdefault(m, [])
+            for s in groups[m]:
+                row = j
+                j += 1
+                wait = float(self.plan.window_wait_s[r, s])
+                if not np.isfinite(wait):
+                    continue                # no window in trace: update dropped
+                group_waits[g] = max(group_waits[g],
+                                     min(wait, self.comm.window_wait_s))
+                p_s = jax.tree_util.tree_map(lambda x: x[row], p)
+                p_s, t = self._exchange(p_s, (s, m), r, "isl")
+                group_walls[g] = max(group_walls[g], t)
+                q.append((p_s, self._weight_of(s), r))
+        merged_rows, delivered = [], 0
+        for m in mains:
+            q = self.pending.get(m, [])
+            fresh = [(pp, w, born) for (pp, w, born) in q
+                     if r - born <= self.fl.max_staleness]
+            self.pending[m] = []
+            if fresh:
+                merged_rows.append(self._aggregate([pp for pp, _, _ in fresh],
+                                                   [w for _, w, _ in fresh]))
+                delivered += len(fresh)
+            else:
+                merged_rows.append(self.global_params)
+        merged_rows += [self.global_params] * (mp - len(mains))
+        merged = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                        *merged_rows)
+        return merged, group_walls, group_waits, delivered
+
+    def _merge_seq_batched(self, r: int, mains: list, groups: dict,
+                           mp: int):
+        # chains are serial WITHIN a group but parallel ACROSS groups: hop
+        # h trains the h-th secondary of every chain as one dispatch
+        chains = [groups[m] for m in mains]
+        n_chains = len(mains)
+        theta = self._broadcast_global(mp)
+        chain_walls = [0.0] * n_chains
+        delivered = sum(len(c) for c in chains)
+        for hop in range(max((len(c) for c in chains), default=0)):
+            active = np.array([len(c) > hop for c in chains]
+                              + [False] * (mp - n_chains))
+            ids = [c[hop] if len(c) > hop else mains[g]
+                   for g, c in enumerate(chains)]
+            p_new, _ = self._train_group_batched(ids, theta, r,
+                                                 update_opt=active[:n_chains],
+                                                 pad_to=mp)
+            mask = jnp.asarray(active)
+            theta = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(
+                    mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+                p_new, theta)
+            act_rows = [g for g in range(n_chains) if active[g]]
+            if self.fl.security == "none":
+                for g in act_rows:
+                    chain_walls[g] += self.comm.isl_transfer(self._row_nbytes)
+                    self.log.count_transfer(self._row_nbytes)
+            else:
+                rows = []
+                for g in act_rows:
+                    p_g = jax.tree_util.tree_map(lambda x: x[g], theta)
+                    p_g, t = self._exchange(p_g, (chains[g][hop], mains[g]),
+                                            r, "isl")
+                    chain_walls[g] += t
+                    rows.append(p_g)
+                # one gather-scatter per hop, not one tree copy per chain
+                idx = jnp.asarray(act_rows)
+                exchanged = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *rows)
+                theta = jax.tree_util.tree_map(
+                    lambda full, new: full.at[idx].set(new), theta, exchanged)
+        return theta, chain_walls, [0.0], delivered
+
+    _BATCHED_SCHEDULERS = {"seq": _merge_seq_batched,
+                           "sim": _merge_sim_batched,
+                           "async": _merge_async_batched}
+
+    # ------------------------------------------------------------------
     # round schedulers
     # ------------------------------------------------------------------
     def _round_qfl(self, r: int) -> int:
         """Flat FedAvg baseline: every satellite talks to the server over
         its own feeder beam — transfers are PARALLEL (wall = max)."""
+        if self.batched:
+            ids = list(range(self.n_sats))
+            npad = self._frame
+            p, _ = self._train_group_batched(
+                ids, self._broadcast_global(npad), r)
+            p, walls = self._exchange_rows(p, ids,
+                                           [("gs", s) for s in ids],
+                                           r, "feeder")
+            self.log.add_wall(2 * max([0.0] + walls))
+            w = np.zeros((npad,), np.float32)
+            w[:self.n_sats] = self.plan.weights
+            self.global_params = self._wmean_rows(p, w)
+            return self.n_sats
         updates, ws, walls = [], [], [0.0]
         for s in range(self.n_sats):
-            p, _ = self._train_sat(s, self.global_params)
+            p, _ = self._train_sat(s, self.global_params, r)
             p, t = self._exchange(p, ("gs", s), r, "feeder")
             walls.append(t)
             updates.append(p)
@@ -300,7 +609,7 @@ class SatQFLTrainer:
             group_waits.append(wait)
             participants += delivered
             if fl.main_trains:
-                merged, _ = self._train_sat(main, merged)
+                merged, _ = self._train_sat(main, merged, r)
                 participants += 1
             merged, t = self._exchange(merged, (main, "gs"), r, "feeder")
             feeder_walls.append(t)
@@ -315,6 +624,38 @@ class SatQFLTrainer:
         # single slowest wait — recorded once, not once per group
         self.log.add_wait(max(group_waits))
         self.log.add_wall(max(group_walls) + 2 * max(feeder_walls))
+        return participants
+
+    def _round_hierarchical_batched(self, r: int) -> int:
+        """The same Algorithm-1 round as ``_round_hierarchical``, but with
+        local training dispatched once per stage over the stacked client
+        axis: secondaries (mode-specific merge), then mains, then one
+        weighted reduction for the global model."""
+        fl = self.fl
+        groups = self.plan.groups(r)
+        mains = list(groups.keys())
+        if not mains:
+            self.log.add_wait(0.0)
+            self.log.add_wall(0.0)
+            return 0
+        mp = self._frame
+        merged, group_walls, group_waits, participants = \
+            self._BATCHED_SCHEDULERS[fl.mode](self, r, mains, groups, mp)
+        if fl.main_trains:
+            merged, _ = self._train_group_batched(mains, merged, r,
+                                                  pad_to=mp)
+            participants += len(mains)
+        merged, feeder_walls = self._exchange_rows(
+            merged, mains, [(m, "gs") for m in mains], r, "feeder")
+        # pad rows carry zero weight -> the padded reduction is exact
+        main_ws = np.zeros((mp,), np.float32)
+        main_ws[:len(mains)] = [self._weight_of(m)
+                                + sum(self._weight_of(s) for s in groups[m])
+                                for m in mains]
+        self.global_params = self._wmean_rows(merged, main_ws)
+        self.log.add_wait(max([0.0] + group_waits))
+        self.log.add_wall(max([0.0] + group_walls)
+                          + 2 * max([0.0] + feeder_walls))
         return participants
 
     # ------------------------------------------------------------------
@@ -333,7 +674,9 @@ class SatQFLTrainer:
         if fl.mode == "qfl":
             m.participants = self._round_qfl(r)
         elif fl.mode in self._GROUP_SCHEDULERS:
-            m.participants = self._round_hierarchical(r)
+            m.participants = (self._round_hierarchical_batched(r)
+                              if self.batched
+                              else self._round_hierarchical(r))
         else:
             raise ValueError(fl.mode)
 

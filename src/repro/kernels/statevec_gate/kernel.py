@@ -25,6 +25,18 @@ same per-qubit gate tensor the fused simulator path builds — packed
 (nq, 8) — and runs ALL nq butterfly stages over a resident state block in
 one kernel (an in-VMEM FFT, one HBM round-trip for the whole layer
 instead of one per gate).
+
+``apply_layer_planes_tiled`` extends the fusion past the VMEM cliff: the
+qubits are split into GROUPS, and each group's butterfly stages are fused
+inside one tile while the grid sweeps the rest of the state — one HBM
+pass per qubit *group* instead of one per gate. Group 0 (qubits
+0..low_qubits-1: strides inside an 8192-lane tile) reuses the resident
+kernel per tile; every higher group [q0, q0+gs) views the state as
+(hi, 2^gs, lo) and fuses its gs stages over blocks spanning the full
+middle axis. A 20-qubit layer is 2 passes (13 + 7 qubits) instead of 20
+per-gate sweeps. Both entries take states with leading batch dims — the
+constellation-batched round engine's client-stacked (B, 2^nq) states fold
+straight into the grid.
 """
 from __future__ import annotations
 
@@ -37,6 +49,12 @@ from jax.experimental import pallas as pl
 DEFAULT_TILE = 8192
 # a whole statevector this size or smaller stays resident for a fused layer
 MAX_FUSED_DIM = 8192
+# tiled multi-stage defaults: group 0 covers LOW_QUBITS in-tile stages;
+# each later pass fuses up to GROUP_QUBITS stages over (2^gs, GROUP_TILE)
+# blocks (64k f32 elements per plane per block — comfortably sub-VMEM)
+LOW_QUBITS = 13
+GROUP_QUBITS = 7
+GROUP_TILE = 512
 
 
 def _butterfly(g, a0r, a0i, a1r, a1i):
@@ -153,30 +171,142 @@ def apply_layer_planes(state_re: jax.Array, state_im: jax.Array,
                        gates8: jax.Array, interpret: bool = True):
     """Apply gate q to qubit q for ALL qubits in one kernel launch.
 
-    state planes (dim,) f32 with dim <= MAX_FUSED_DIM (the whole state must
-    sit in VMEM — larger states go gate-by-gate via apply_gate_planes);
-    gates8 (nq, 8) f32, the packed per-qubit gate tensor.
+    state planes (..., dim) f32 with dim <= MAX_FUSED_DIM (the whole state
+    must sit in VMEM — larger states take ``apply_layer_planes_tiled``);
+    gates8 (nq, 8) f32, the packed per-qubit gate tensor. Leading batch
+    dims fold into the grid (one resident block per stacked state).
     """
-    dim = state_re.shape[0]
+    dim = state_re.shape[-1]
     nq = dim.bit_length() - 1
     assert dim <= MAX_FUSED_DIM, (dim, MAX_FUSED_DIM)
     assert gates8.shape == (nq, 8), gates8.shape
     g = gates8.astype(jnp.float32)
-    xr = state_re.reshape(1, dim)
-    xi = state_im.reshape(1, dim)
+    lead = state_re.shape[:-1]
+    b = 1
+    for s in lead:
+        b *= s
+    xr = state_re.reshape(b, dim)
+    xi = state_im.reshape(b, dim)
     outr, outi = pl.pallas_call(
         functools.partial(_kernel_fused_layer, nq=nq),
-        grid=(1,),
+        grid=(b,),
         in_specs=[
             pl.BlockSpec((nq, 8), lambda i: (0, 0)),
-            pl.BlockSpec((1, dim), lambda i: (0, 0)),
-            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, dim), lambda i: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, dim), lambda i: (0, 0)),
-            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, dim), lambda i: (i, 0)),
         ],
-        out_shape=[jax.ShapeDtypeStruct((1, dim), jnp.float32)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((b, dim), jnp.float32)] * 2,
         interpret=interpret,
     )(g, xr, xi)
-    return outr.reshape(dim), outi.reshape(dim)
+    return outr.reshape(lead + (dim,)), outi.reshape(lead + (dim,))
+
+
+def _kernel_fused_group(g_ref, xr_ref, xi_ref, or_ref, oi_ref, *, gs: int):
+    """Butterfly stages of one qubit GROUP over a (2^gs, T) block.
+
+    The block spans the full middle axis of the (hi, 2^gs, lo) state view,
+    so stage t (global qubit q0 + t) pairs middle indices differing in bit
+    t — all gs stages run with the block resident (one HBM pass for the
+    whole group).
+    """
+    xr = xr_ref[0]
+    xi = xi_ref[0]
+    m, t_lanes = xr.shape
+    for t in range(gs):                      # static unroll
+        inner = 1 << t
+        outer = m // (2 * inner)
+        r4 = xr.reshape(outer, 2, inner, t_lanes)
+        i4 = xi.reshape(outer, 2, inner, t_lanes)
+        y0r, y0i, y1r, y1i = _butterfly(
+            g_ref[t], r4[:, 0], i4[:, 0], r4[:, 1], i4[:, 1])
+        xr = jnp.stack([y0r, y1r], axis=1).reshape(m, t_lanes)
+        xi = jnp.stack([y0i, y1i], axis=1).reshape(m, t_lanes)
+    or_ref[0] = xr
+    oi_ref[0] = xi
+
+
+@functools.partial(jax.jit, static_argnames=("low_qubits", "group_qubits",
+                                             "group_tile", "interpret"))
+def apply_layer_planes_tiled(state_re: jax.Array, state_im: jax.Array,
+                             gates8: jax.Array, low_qubits: int = LOW_QUBITS,
+                             group_qubits: int = GROUP_QUBITS,
+                             group_tile: int = GROUP_TILE,
+                             interpret: bool = True):
+    """Fused layer past the VMEM cliff: one HBM pass per qubit group.
+
+    state planes (..., dim) f32, any dim = 2^nq; gates8 (nq, 8) f32.
+    Pass 0 fuses qubits [0, low_qubits) with the resident per-tile kernel;
+    each later pass fuses up to ``group_qubits`` stages over
+    (2^gs, group_tile) blocks of the (hi, 2^gs, lo) view. Leading batch
+    dims fold into the hi grid axis.
+    """
+    dim = state_re.shape[-1]
+    nq = dim.bit_length() - 1
+    assert gates8.shape == (nq, 8), (gates8.shape, nq)
+    g = gates8.astype(jnp.float32)
+    lead = state_re.shape[:-1]
+    b = 1
+    for s in lead:
+        b *= s
+    xr = state_re.reshape(b, dim)
+    xi = state_im.reshape(b, dim)
+
+    # pass 0: in-tile stages, grid over (batch · dim/T) tiles
+    g0 = min(nq, low_qubits)
+    t0 = 1 << g0
+    rows = b * (dim // t0)
+    xr2 = xr.reshape(rows, t0)
+    xi2 = xi.reshape(rows, t0)
+    xr2, xi2 = pl.pallas_call(
+        functools.partial(_kernel_fused_layer, nq=g0),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((g0, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, t0), lambda i: (i, 0)),
+            pl.BlockSpec((1, t0), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t0), lambda i: (i, 0)),
+            pl.BlockSpec((1, t0), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((rows, t0), jnp.float32)] * 2,
+        interpret=interpret,
+    )(g[:g0], xr2, xi2)
+    xr = xr2.reshape(b, dim)
+    xi = xi2.reshape(b, dim)
+
+    # higher passes: fuse up to group_qubits stages per (2^gs, Tc) block
+    q0 = g0
+    while q0 < nq:
+        gs = min(nq - q0, group_qubits)
+        mid = 1 << gs
+        lo = 1 << q0
+        hi = b * (dim // (mid * lo))
+        tc = min(lo, group_tile)
+        nt = lo // tc
+        xr3 = xr.reshape(hi, mid, lo)
+        xi3 = xi.reshape(hi, mid, lo)
+        xr3, xi3 = pl.pallas_call(
+            functools.partial(_kernel_fused_group, gs=gs),
+            grid=(hi, nt),
+            in_specs=[
+                pl.BlockSpec((gs, 8), lambda h, t: (0, 0)),
+                pl.BlockSpec((1, mid, tc), lambda h, t: (h, 0, t)),
+                pl.BlockSpec((1, mid, tc), lambda h, t: (h, 0, t)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, mid, tc), lambda h, t: (h, 0, t)),
+                pl.BlockSpec((1, mid, tc), lambda h, t: (h, 0, t)),
+            ],
+            out_shape=[jax.ShapeDtypeStruct((hi, mid, lo), jnp.float32)] * 2,
+            interpret=interpret,
+        )(g[q0:q0 + gs], xr3, xi3)
+        xr = xr3.reshape(b, dim)
+        xi = xi3.reshape(b, dim)
+        q0 += gs
+
+    return xr.reshape(lead + (dim,)), xi.reshape(lead + (dim,))

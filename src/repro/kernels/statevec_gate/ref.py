@@ -2,6 +2,8 @@
 
 Also defines the math used by the custom-vjp backward: the butterfly is
 real-linear in the planes, so the adjoint is the conjugate-transpose gate.
+All entries take states of shape (..., dim) — leading batch dims broadcast
+(the batched fused-layer kernel is checked against the same oracle).
 """
 from __future__ import annotations
 
@@ -10,20 +12,21 @@ import jax.numpy as jnp
 
 
 def apply_gate_planes_ref(state_re, state_im, gate8, qubit: int):
-    dim = state_re.shape[0]
+    dim = state_re.shape[-1]
+    lead = state_re.shape[:-1]
     lo = 1 << qubit
     hi = dim // (2 * lo)
-    xr = state_re.reshape(hi, 2, lo)
-    xi = state_im.reshape(hi, 2, lo)
+    xr = state_re.reshape(lead + (hi, 2, lo))
+    xi = state_im.reshape(lead + (hi, 2, lo))
     g00r, g00i, g01r, g01i, g10r, g10i, g11r, g11i = [gate8[i] for i in range(8)]
-    a0r, a1r = xr[:, 0], xr[:, 1]
-    a0i, a1i = xi[:, 0], xi[:, 1]
+    a0r, a1r = xr[..., 0, :], xr[..., 1, :]
+    a0i, a1i = xi[..., 0, :], xi[..., 1, :]
     y0r = g00r * a0r - g00i * a0i + g01r * a1r - g01i * a1i
     y0i = g00r * a0i + g00i * a0r + g01r * a1i + g01i * a1r
     y1r = g10r * a0r - g10i * a0i + g11r * a1r - g11i * a1i
     y1i = g10r * a0i + g10i * a0r + g11r * a1i + g11i * a1r
-    outr = jnp.stack([y0r, y1r], axis=1).reshape(dim)
-    outi = jnp.stack([y0i, y1i], axis=1).reshape(dim)
+    outr = jnp.stack([y0r, y1r], axis=-2).reshape(lead + (dim,))
+    outi = jnp.stack([y0i, y1i], axis=-2).reshape(lead + (dim,))
     return outr, outi
 
 
@@ -45,19 +48,22 @@ def adjoint_gate8(gate8):
 
 def gate_grad(state_re, state_im, cot_re, cot_im, qubit: int):
     """Cotangent wrt the 8 gate reals (real-linear transpose)."""
-    dim = state_re.shape[0]
+    dim = state_re.shape[-1]
+    lead = state_re.shape[:-1]
     lo = 1 << qubit
     hi = dim // (2 * lo)
-    ar = state_re.reshape(hi, 2, lo)
-    ai = state_im.reshape(hi, 2, lo)
-    yr = cot_re.reshape(hi, 2, lo)
-    yi = cot_im.reshape(hi, 2, lo)
+    ar = state_re.reshape(lead + (hi, 2, lo))
+    ai = state_im.reshape(lead + (hi, 2, lo))
+    yr = cot_re.reshape(lead + (hi, 2, lo))
+    yi = cot_im.reshape(lead + (hi, 2, lo))
 
     def pair(i, j):
         # g_ij couples y_i with a_j:
         # gr_ij = sum(yr_i*ar_j + yi_i*ai_j); gi_ij = sum(-yr_i*ai_j + yi_i*ar_j)
-        gr = jnp.sum(yr[:, i] * ar[:, j] + yi[:, i] * ai[:, j])
-        gi = jnp.sum(-yr[:, i] * ai[:, j] + yi[:, i] * ar[:, j])
+        gr = jnp.sum(yr[..., i, :] * ar[..., j, :]
+                     + yi[..., i, :] * ai[..., j, :])
+        gi = jnp.sum(-yr[..., i, :] * ai[..., j, :]
+                     + yi[..., i, :] * ar[..., j, :])
         return gr, gi
 
     g00 = pair(0, 0); g01 = pair(0, 1); g10 = pair(1, 0); g11 = pair(1, 1)

@@ -14,6 +14,13 @@ Two entry modes:
 
       PYTHONPATH=src python -m repro.launch.train --fl --mode sim \
           --security secagg --rounds 5
+
+    --engine host runs the host-orchestrated trainer instead (full comm
+    model + Algorithm 2 security) with the constellation-batched executor;
+    --engine host-perclient selects its per-client numerics oracle:
+
+      PYTHONPATH=src python -m repro.launch.train --fl --engine host \
+          --mode sim --rounds 5 --sats 32
 """
 from __future__ import annotations
 
@@ -96,6 +103,28 @@ def run_lm(args):
     return losses
 
 
+def run_fl_host(args, cfg, api, fl, trace, sats, server):
+    """Host-orchestrated engine (comm model + Algorithm 2 security) —
+    constellation-batched executor by default, per-client oracle via
+    --engine host-perclient."""
+    import time as _time
+
+    from repro.core import SatQFLTrainer
+
+    batched = args.engine == "host"
+    tr = SatQFLTrainer(cfg, api, fl, trace, sats, server, batched=batched)
+    print(f"[fl] host engine ({'batched' if batched else 'per-client'}) "
+          f"mode={fl.mode} security={fl.security} sats={tr.n_sats}")
+    for r in range(fl.n_rounds):
+        t0 = _time.perf_counter()
+        m = tr.run_round(r)
+        print(f"  round {r}: val_loss={m.server_val_loss:.4f} "
+              f"val_acc={m.server_val_acc:.3f} comm={m.comm_s:.2f}s "
+              f"participants={m.participants} "
+              f"({(_time.perf_counter() - t0) * 1e3:.0f} ms wall)")
+    return tr
+
+
 def run_fl(args):
     from repro.constellation import build_trace
     from repro.core import SatQFLConfig, compile_round_plan
@@ -108,27 +137,43 @@ def run_fl(args):
         vqc_qubits=args.qubits, vqc_layers=2, n_features=args.qubits)
     api = get_model(cfg)
     n_sats = args.sats
+    if args.engine == "dist":
+        security = args.security
+    else:
+        # host engine speaks Algorithm-2 mode names: the in-graph 'otp'
+        # is the host's QKD-keyed OTP(+MAC); 'secagg' has no host
+        # equivalent (masking is an in-graph construction) — reject it
+        # rather than silently running unsecured
+        host_map = {"none": "none", "otp": "qkd"}
+        if args.security not in host_map:
+            raise SystemExit(
+                f"--security {args.security} is dist-engine only; the host "
+                f"engine supports none|otp (otp runs as QKD-keyed OTP+MAC)")
+        security = host_map[args.security]
     fl = SatQFLConfig(mode=args.mode, n_rounds=args.rounds,
                       local_steps=args.local_steps,
-                      batch_size=args.batch, lr=args.lr, seed=args.seed)
+                      batch_size=args.batch, lr=args.lr, seed=args.seed,
+                      security=security)
+    X, y = make_statlog(n_features=args.qubits)
+    Xc, yc, server = server_split(X, y)
+    sats = dirichlet_partition(Xc, yc, n_sats)
+    trace = build_trace(n_sats=n_sats, n_planes=max(n_sats // 2, 1),
+                        duration_s=3600, step_s=60, seed=args.seed)
+    if args.engine != "dist":
+        return run_fl_host(args, cfg, api, fl, trace, sats, server)
+
     opt = sgd(fl.lr)
     state = fl_init_state(cfg, api, opt, n_sats, jax.random.PRNGKey(args.seed))
     seq_hops = 4
     round_fn = jax.jit(make_fl_round(cfg, api, fl, opt, n_sats,
                                      security=args.security,
                                      seq_hops=seq_hops))
-
-    X, y = make_statlog(n_features=args.qubits)
-    Xc, yc, server = server_split(X, y)
-    sats = dirichlet_partition(Xc, yc, n_sats)
     per = min(len(s["features"]) for s in sats)
     E, Bn = fl.local_steps, fl.batch_size
     steps = E * seq_hops if fl.mode == "seq" else E
 
     # participation masks, pad seeds and FedAvg weights all come from the
     # compiled constellation schedule — not invented here
-    trace = build_trace(n_sats=n_sats, n_planes=max(n_sats // 2, 1),
-                        duration_s=3600, step_s=60, seed=args.seed)
     plan = compile_round_plan(
         trace, fl, sample_counts=[len(s["labels"]) for s in sats],
         with_seeds=(args.security != "none"))
@@ -168,6 +213,11 @@ def main(argv=None):
     # FL mode
     ap.add_argument("--fl", action="store_true")
     ap.add_argument("--mode", default="sim", choices=["sim", "seq", "async", "qfl"])
+    ap.add_argument("--engine", default="dist",
+                    choices=["dist", "host", "host-perclient"],
+                    help="dist = in-graph mesh round; host = paper-scale "
+                         "trainer (constellation-batched); host-perclient "
+                         "= its per-client numerics oracle")
     ap.add_argument("--security", default="none",
                     choices=["none", "otp", "secagg"])
     ap.add_argument("--rounds", type=int, default=5)
