@@ -1,10 +1,24 @@
-"""Paper Figs 8-11: teleportation and QKD/QKD-Fernet variants — accuracy
-parity (security must be learning-transparent) + measured overhead."""
+"""Security-plane benchmarks.
+
+1. Paper Figs 8-11 (``teleport`` / ``qkd``): teleportation and
+   QKD/QKD-Fernet variants — accuracy parity (security must be
+   learning-transparent) + measured overhead.
+2. ``algorithm2``: edge-batched vs per-edge Algorithm 2 — the whole
+   QKD-establishment → pad-expansion → OTP-XOR → MAC pipeline for E round
+   edges as E host dispatches vs ONE stacked dispatch per phase, with
+   bit-identical ciphertexts/tags asserted per edge (the PR-4 acceptance
+   numbers recorded in ``results/bench_security.json``).
+"""
 from __future__ import annotations
 
+import functools
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.bench_frameworks import run
+from benchmarks.common import time_call
 
 
 def teleport(dataset="statlog", **kw):
@@ -28,9 +42,110 @@ def qkd(dataset="statlog", **kw):
     return o1
 
 
+def algorithm2(n_edges: int = 64, n_qkd_bits: int = 512,
+               n_words: int = 1024) -> dict:
+    """Edge-batched vs per-edge Algorithm 2 over ``n_edges`` round edges.
+
+    Per-edge = the oracle loop the trainer used to run: one jitted
+    dispatch per edge for BB84 keygen and one for pad+XOR+MAC. Batched =
+    one stacked dispatch per phase (``bb84_keygen_edges``,
+    ``encrypt_flat`` rows + ``poly_mac_rows``). Ciphertexts and tags are
+    asserted bit-identical per edge before any timing is recorded.
+    """
+    from repro.quantum.qkd import (bb84_keygen, bb84_keygen_edges,
+                                   derive_pad_seed, derive_pad_seeds)
+    from repro.security.keys import mac_key_mix
+    from repro.security.mac import poly_mac_rows, poly_mac_u32
+    from repro.security.otp import pad_u32, pad_u32_rows
+
+    master = jax.random.PRNGKey(11)
+    keys = jax.random.split(master, n_edges)
+    eav = jnp.zeros((n_edges,), bool)
+
+    # --- phase 1: QKD establishment (BB84 + sifting + seed derivation) ---
+    @jax.jit
+    def qkd_one(k):
+        res = bb84_keygen(k, n_qkd_bits)
+        return derive_pad_seed(res.sifted_key, res.key_len), res.qber
+
+    @jax.jit
+    def qkd_edges(ks):
+        res = bb84_keygen_edges(ks, n_qkd_bits, eav)
+        return derive_pad_seeds(res.sifted_key, res.key_len), res.qber
+
+    def qkd_loop(ks):
+        return [qkd_one(ks[e]) for e in range(n_edges)]
+
+    seeds_b, _ = qkd_edges(keys)
+    for e, (seed_1, _) in enumerate(qkd_loop(keys)):
+        assert int(seed_1) == int(seeds_b[e]), "establishment diverged"
+    qkd_loop_us = time_call(qkd_loop, keys, iters=3, warmup=1)
+    qkd_batch_us = time_call(qkd_edges, keys, iters=3, warmup=1)
+
+    # --- phase 2: pad expansion + OTP-XOR + MAC over the wire streams ---
+    rng = np.random.default_rng(5)
+    msgs = jnp.asarray(rng.integers(0, 2**32, (n_edges, n_words),
+                                    dtype=np.uint32))
+    seeds = jnp.asarray(seeds_b, jnp.uint32)
+    rk_np, sk_np = mac_key_mix(np.asarray(seeds_b))
+    rks, sks = jnp.asarray(rk_np), jnp.asarray(sk_np)
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def otp_mac_one(msg, seed, rk, sk, n=n_words):
+        ct = msg ^ pad_u32(seed, n)
+        return ct, poly_mac_u32(ct, rk, sk)
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def otp_mac_edges(ms, sds, rk, sk, n=n_words):
+        cts = ms ^ pad_u32_rows(sds, n)
+        return cts, poly_mac_rows(cts, rk, sk)
+
+    def otp_loop(ms):
+        return [otp_mac_one(ms[e], seeds[e], rks[e], sks[e])
+                for e in range(n_edges)]
+
+    cts_b, tags_b = otp_mac_edges(msgs, seeds, rks, sks)
+    for e, (ct_1, tag_1) in enumerate(otp_loop(msgs)):
+        assert bool(jnp.all(ct_1 == cts_b[e])), "ciphertext diverged"
+        assert int(tag_1) == int(tags_b[e]), "MAC tag diverged"
+    otp_loop_us = time_call(otp_loop, msgs, iters=5, warmup=2)
+    otp_batch_us = time_call(otp_mac_edges, msgs, seeds, rks, sks,
+                             iters=5, warmup=2)
+
+    total_loop = qkd_loop_us + otp_loop_us
+    total_batch = qkd_batch_us + otp_batch_us
+    return {
+        "n_edges": n_edges,
+        "n_qkd_bits": n_qkd_bits,
+        "n_words": n_words,
+        "qkd_per_edge_us": qkd_loop_us,
+        "qkd_batched_us": qkd_batch_us,
+        "qkd_speedup": qkd_loop_us / qkd_batch_us,
+        "otp_mac_per_edge_us": otp_loop_us,
+        "otp_mac_batched_us": otp_batch_us,
+        "otp_mac_speedup": otp_loop_us / otp_batch_us,
+        "total_per_edge_us": total_loop,
+        "total_batched_us": total_batch,
+        "speedup": total_loop / total_batch,
+        "bit_identical": True,          # asserted above, per edge
+    }
+
+
 def quick():
     t = teleport(n_sats=10, n_rounds=2, local_steps=3, qubits=4)
     fw = t["frameworks"]
     acc_delta = abs(fw["QFL"]["server_val_acc_final"]
                     - fw["QFL-TP"]["server_val_acc_final"])
-    return t, f"tp_acc_delta={acc_delta:.4f}"
+    a2 = algorithm2(n_edges=64)
+    t["algorithm2"] = a2
+    t["algorithm2_n32"] = algorithm2(n_edges=32)
+    return t, (f"a2_speedup={a2['speedup']:.2f}x "
+               f"tp_acc_delta={acc_delta:.4f}")
+
+
+def full():
+    t = qkd(n_sats=20, n_rounds=10, local_steps=8)
+    t["algorithm2"] = algorithm2(n_edges=64)
+    t["algorithm2_n32"] = algorithm2(n_edges=32)
+    t["algorithm2_bulk"] = algorithm2(n_edges=64, n_words=16384)
+    return t, f"a2_speedup={t['algorithm2']['speedup']:.2f}x"

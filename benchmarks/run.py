@@ -46,6 +46,7 @@ def main(argv=None):
                 n_sats=20, n_rounds=10, local_steps=8), ""),
             "qkd": lambda: (bench_security.qkd(
                 n_sats=20, n_rounds=10, local_steps=8), ""),
+            "security": bench_security.full,
             "comm": lambda: (bench_comm.comm_times(
                 n_sats=50, n_rounds=10, local_steps=8), ""),
             "constellation": lambda: (bench_constellation.scenario(), ""),

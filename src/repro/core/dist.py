@@ -41,6 +41,8 @@ import numpy as np
 from repro.core.flconfig import SatQFLConfig
 from repro.core.localtrain import make_local_train
 from repro.nn.optim import Optimizer
+from repro.security.mac import mac_verify_rows, poly_mac_rows
+from repro.security.otp import encrypt_tree_rows, tree_to_u32_rows
 from repro.sharding.context import DistCtx
 
 
@@ -56,33 +58,28 @@ class FLState(NamedTuple):
 # security primitives over stacked pytrees
 # ---------------------------------------------------------------------------
 
-_UDTYPE = {
-    jnp.dtype(jnp.float32): jnp.uint32,
-    jnp.dtype(jnp.bfloat16): jnp.uint16,
-    jnp.dtype(jnp.float16): jnp.uint16,
-}
+def otp_stacked(tree, seeds_u32):
+    """OTP over a stacked pytree; seeds (n_sat,) uint32. Involution.
+
+    Thin alias for the shared edge-batched security plane
+    (``repro.security.otp.encrypt_tree_rows``) — the same stacked
+    pad-expansion + XOR program the host engine dispatches per round
+    stage, so the two engines cannot drift.
+    """
+    return encrypt_tree_rows(tree, seeds_u32)
 
 
-def _xor_with_pad(leaf, keys):
-    """XOR each satellite's slice with its own threefry pad. leaf (N, ...)."""
-    ud = _UDTYPE[jnp.dtype(leaf.dtype)]
-    u = jax.lax.bitcast_convert_type(leaf, ud)
+def mac_tags_stacked(tree, round_seeds_u32):
+    """Per-satellite MAC tags over a stacked ciphertext tree, in-graph.
 
-    def one(k, row):
-        return row ^ jax.random.bits(k, row.shape, ud)
-
-    return jax.lax.bitcast_convert_type(jax.vmap(one)(keys, u), leaf.dtype)
-
-
-def otp_stacked(tree, seeds_u32, leaf_salt: int = 0):
-    """OTP over a stacked pytree; seeds (n_sat,) uint32. Involution."""
-    base = jax.vmap(jax.random.key)(seeds_u32)
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    out = []
-    for i, leaf in enumerate(leaves):
-        keys = jax.vmap(lambda k: jax.random.fold_in(k, i + leaf_salt))(base)
-        out.append(_xor_with_pad(leaf, keys))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    The (r, s) key pair is derived from the per-round seed with the same
+    integer mix as ``repro.security.keys.mac_key_mix`` (uint32 wraparound
+    == the host helper's low 32 bits). Returns (tags (N,), r (N,), s (N,));
+    the receiver recomputes its own streams from the moved ciphertext.
+    """
+    r = round_seeds_u32 ^ jnp.uint32(0xA5A5A5A5)
+    s = (round_seeds_u32 * jnp.uint32(747796405)) + jnp.uint32(2891336453)
+    return poly_mac_rows(tree_to_u32_rows(tree), r, s), r, s
 
 
 def secagg_mask(tree, seeds_u32, sign_split: int):
@@ -208,6 +205,7 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
             w_agg = jnp.ones((n_sats,))
         else:
             w_agg = weights
+        mac_ok = None           # otp_gather: per-round integrity verdict
 
         if fl.mode == "seq":
             # pipelined sequential: train -> secure hand-off to next satellite
@@ -236,10 +234,16 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
                     # Compare with 'secagg' (masked psum, O(d)) — §Perf D.
                     s = seeds ^ (r.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
                     ct = otp_stacked(p, s)
+                    # sender-side tags over the stacked ciphertexts — the
+                    # same batched MAC plane the host engine dispatches
+                    tags, rk, sk = mac_tags_stacked(ct, s)
                     from jax.sharding import PartitionSpec as P
                     ct = jax.lax.with_sharding_constraint(
                         ct, jax.tree_util.tree_map(
                             lambda leaf: P(*([None] * leaf.ndim)), ct))
+                    # aggregator-side verify of every edge, in-graph
+                    mac_ok = jnp.all(mac_verify_rows(
+                        tree_to_u32_rows(ct), tags, rk, sk))
                     moved = otp_stacked(ct, s)        # decrypt at aggregator
                 else:
                     moved = exchange(p, seeds, r)
@@ -277,8 +281,10 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
             else:
                 raise ValueError(fl.mode)
 
-        return FLState(new_params, o, new_stale, new_age, r + 1), \
-            {"loss": mean_loss}
+        metrics = {"loss": mean_loss}
+        if mac_ok is not None:
+            metrics["mac_ok"] = mac_ok
+        return FLState(new_params, o, new_stale, new_age, r + 1), metrics
 
     return round_fn
 

@@ -29,6 +29,9 @@ class SatQFLConfig:
     qkd_bits: int = 512
     teleport_pairs: int = 16     # (θ,φ) pairs teleported per exchange
     verify_mac: bool = True
+    on_qber_abort: str = "raise"  # raise | drop — a compromised edge kills
+    #   the round (legacy) or just drops its update (paper §III-B: the
+    #   satellite leaves C(t) until re-keyed); aborts surface per edge
 
     # --- aggregation -------------------------------------------------------
     weight_by_samples: bool = True   # FedAvg weighting w_i
@@ -36,6 +39,14 @@ class SatQFLConfig:
 
     seed: int = 0
     eval_every: int = 1
+
+    def __post_init__(self):
+        # a security-policy typo must fail loudly, never silently pick
+        # the weaker behavior
+        if self.on_qber_abort not in ("raise", "drop"):
+            raise ValueError(
+                f"on_qber_abort must be 'raise' or 'drop', "
+                f"got {self.on_qber_abort!r}")
 
     def replace(self, **kw) -> "SatQFLConfig":
         return dataclasses.replace(self, **kw)

@@ -31,7 +31,53 @@ from repro.constellation.topology import (
     ConstellationTrace, isl_routes_batched, pairwise_distances, round_steps,
 )
 from repro.core.flconfig import SatQFLConfig
-from repro.security.keys import KeyManager
+from repro.security.keys import (
+    KeyManager, canonical_edge, mac_key_mix, round_seed_mix,
+)
+
+GROUND = -1    # edge endpoint id for the ground station ("gs")
+
+
+@dataclass(frozen=True)
+class EdgeSchedule:
+    """Per-round secure-exchange schedule, stacked over an edge axis.
+
+    Every exchange the engines will perform is compiled into dense
+    ``(R, E_max)`` arrays, laid out stage-major within each round (the
+    stage = one edge-batched dispatch: ISL uplinks of a `sim`/`async`
+    round, one hop of every `seq` chain, or the feeder uplinks). CSR-style
+    ``ptr`` bounds each (round, stage); the tail past ``ptr[r, -1]`` is
+    padding (``mask`` False).
+
+    Key material (seed/mac_r/mac_s/first/abort) is filled only when a
+    :class:`KeyManager` was available at compile time: all edges are then
+    established in ONE vmapped BB84 dispatch, per-(round, edge) pad seeds
+    come from the shared ``round_seed_mix`` fold-in, ``first`` marks each
+    edge's first planned use (where QKD-establishment time is paid), and
+    ``abort`` marks edges whose measured QBER crossed the abort threshold
+    at establishment (the vectorized eavesdropper check).
+    """
+    n_stages: np.ndarray      # (R,) int — dispatch stages per round
+    ptr: np.ndarray           # (R, S_max + 1) int — CSR offsets per stage
+    src: np.ndarray           # (R, E_max) int — sender satellite
+    dst: np.ndarray           # (R, E_max) int — receiver; GROUND = station
+    link: np.ndarray          # (R, E_max) uint8 — 0 ISL, 1 feeder
+    conc: np.ndarray          # (R, E_max) int — ISL-aperture concurrency
+    mask: np.ndarray          # (R, E_max) bool — valid edge
+    first: np.ndarray         # (R, E_max) bool — first contact (QKD here)
+    abort: np.ndarray         # (R, E_max) bool — QBER abort at establishment
+    seed: np.ndarray          # (R, E_max) uint32 — per-(round, edge) pad seed
+    mac_r: np.ndarray         # (R, E_max) uint32 — MAC evaluation point
+    mac_s: np.ndarray         # (R, E_max) uint32 — MAC blind
+    with_keys: bool           # key-material columns populated?
+
+    def stage_bounds(self, r: int, stage: int) -> tuple[int, int]:
+        return int(self.ptr[r, stage]), int(self.ptr[r, stage + 1])
+
+    def edge_tuple(self, r: int, j: int) -> tuple:
+        a = int(self.src[r, j])
+        b = "gs" if int(self.dst[r, j]) == GROUND else int(self.dst[r, j])
+        return canonical_edge((a, b))
 
 
 @dataclass(frozen=True)
@@ -54,6 +100,7 @@ class RoundPlan:
     seeds: np.ndarray             # (R, N) uint32 — QKD-derived pad seed of each
                                   #   sat's uplink edge at round r
     weights: np.ndarray           # (N,) float32 — FedAvg aggregation weights w_i
+    edges: EdgeSchedule | None = None   # per-round secure-exchange schedule
 
     # ------------------------------------------------------------------
     # per-round views
@@ -114,19 +161,17 @@ def _window_waits(trace: ConstellationTrace, t_idx, assignment, prim):
 
 
 def _seed_schedule(trace, t_idx, assignment, prim, fl: SatQFLConfig,
-                   keymgr: KeyManager | None):
+                   keymgr: KeyManager):
     """(R, N) uint32 round seeds for every satellite's uplink edge.
 
     qfl mode uplinks over feeder beams (edge (sat, "gs")); hierarchical
     modes uplink secondaries over their assigned ISL and primaries over
     the feeder. Seeds come from the KeyManager's BB84-established edge
-    keys with the round index folded in (fresh pad every round).
+    keys with the round index folded in (fresh pad every round). All
+    edges are established in one batched BB84 dispatch.
     """
     R, N = assignment.shape
-    if keymgr is None:
-        keymgr = KeyManager(jax.random.PRNGKey(fl.seed + 7),
-                            n_qkd_bits=fl.qkd_bits)
-    seeds = np.zeros((R, N), np.uint32)
+    cells = {}
     for r in range(R):
         for s in range(N):
             if fl.mode == "qfl" or prim[r, s]:
@@ -135,8 +180,110 @@ def _seed_schedule(trace, t_idx, assignment, prim, fl: SatQFLConfig,
                 edge = (s, int(assignment[r, s]))
             else:
                 continue                    # unreachable: no uplink, seed 0
-            seeds[r, s] = np.uint32(keymgr.get(edge).round_seed(r))
+            cells[(r, s)] = canonical_edge(edge)
+    eks = keymgr.establish_edges(list(dict.fromkeys(cells.values())))
+    base = {ek.edge: ek.seed for ek in eks}
+    seeds = np.zeros((R, N), np.uint32)
+    for (r, s), edge in cells.items():
+        seeds[r, s] = round_seed_mix(base[edge], r)
     return seeds
+
+
+def _groups_of(assignment_r: np.ndarray, prim_r: np.ndarray):
+    """{main: [secondaries]} for one round (mirrors ``RoundPlan.groups``)."""
+    out: dict[int, list[int]] = {int(p): [] for p in np.where(prim_r)[0]}
+    for s in np.where(~prim_r & (assignment_r >= 0))[0]:
+        out[int(assignment_r[s])].append(int(s))
+    return out
+
+
+def _round_stages(fl: SatQFLConfig, assignment_r, prim_r, waits_r, n_sats):
+    """Edge list of each dispatch stage of one round, in execution order.
+
+    Each edge is (src, dst, link, conc) with dst = GROUND for the feeder.
+    Mirrors exactly how the engines walk a round: qfl = one feeder stage;
+    sim/async = ISL uplinks (async drops windowless secondaries before the
+    exchange) then feeder; seq = one stage per chain hop, then feeder.
+    """
+    if fl.mode == "qfl":
+        return [[(s, GROUND, 1, 1) for s in range(n_sats)]]
+    groups = _groups_of(assignment_r, prim_r)
+    mains = list(groups)
+    stages = []
+    if fl.mode == "sim":
+        stages.append([(s, m, 0, max(len(groups[m]), 1))
+                       for m in mains for s in groups[m]])
+    elif fl.mode == "async":
+        stages.append([(s, m, 0, 1) for m in mains for s in groups[m]
+                       if np.isfinite(waits_r[s])])
+    elif fl.mode == "seq":
+        chains = [groups[m] for m in mains]
+        for hop in range(max((len(c) for c in chains), default=0)):
+            stages.append([(c[hop], mains[g], 0, 1)
+                           for g, c in enumerate(chains) if len(c) > hop])
+    else:
+        raise ValueError(fl.mode)
+    stages.append([(m, GROUND, 1, 1) for m in mains])
+    return stages
+
+
+def _edge_schedule(fl: SatQFLConfig, assignment, prim, waits,
+                   keymgr: KeyManager | None) -> EdgeSchedule:
+    """Compile the per-round secure-exchange plane (see EdgeSchedule)."""
+    R, N = assignment.shape
+    per_round = [_round_stages(fl, assignment[r], prim[r], waits[r], N)
+                 for r in range(R)]
+    S_max = max(len(st) for st in per_round)
+    E_max = max(max((sum(len(s) for s in st) for st in per_round)), 1)
+
+    n_stages = np.asarray([len(st) for st in per_round])
+    ptr = np.zeros((R, S_max + 1), np.int64)
+    src = np.zeros((R, E_max), np.int64)
+    dst = np.full((R, E_max), GROUND, np.int64)
+    link = np.zeros((R, E_max), np.uint8)
+    conc = np.ones((R, E_max), np.int64)
+    mask = np.zeros((R, E_max), bool)
+    first = np.zeros((R, E_max), bool)
+    abort = np.zeros((R, E_max), bool)
+    seed = np.zeros((R, E_max), np.uint32)
+    mac_r = np.zeros((R, E_max), np.uint32)
+    mac_s = np.zeros((R, E_max), np.uint32)
+
+    cells = np.empty((R, E_max), object)
+    seen: set = set()
+    for r, stages in enumerate(per_round):
+        j = 0
+        for si, stage in enumerate(stages):
+            for (a, b, lk, c) in stage:
+                e = canonical_edge((a, "gs" if b == GROUND else b))
+                src[r, j], dst[r, j] = a, b
+                link[r, j], conc[r, j], mask[r, j] = lk, c, True
+                cells[r, j] = e
+                if e not in seen:
+                    seen.add(e)
+                    first[r, j] = True
+                j += 1
+            ptr[r, si + 1] = j
+        ptr[r, len(stages):] = j
+
+    if keymgr is not None and seen:
+        # ONE vmapped BB84 for every edge the whole plan will ever use
+        order = [cells[r, j] for r in range(R) for j in range(E_max)
+                 if mask[r, j] and first[r, j]]
+        eks = keymgr.establish_edges(order)
+        info = {ek.edge: ek for ek in eks}
+        for r in range(R):
+            for j in range(int(ptr[r, -1])):
+                ek = info[cells[r, j]]
+                abort[r, j] = ek.compromised
+                rs = round_seed_mix(ek.seed, r)
+                seed[r, j] = rs
+                mac_r[r, j], mac_s[r, j] = mac_key_mix(rs)
+
+    return EdgeSchedule(n_stages=n_stages, ptr=ptr, src=src, dst=dst,
+                        link=link, conc=conc, mask=mask, first=first,
+                        abort=abort, seed=seed, mac_r=mac_r, mac_s=mac_s,
+                        with_keys=keymgr is not None)
 
 
 def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
@@ -147,8 +294,12 @@ def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
 
     sample_counts — per-satellite dataset sizes for FedAvg weighting
     (ignored unless ``fl.weight_by_samples``); keymgr — reuse an existing
-    QKD key registry (e.g. the trainer's) so plan seeds match its pads;
-    with_seeds=False skips BB84 entirely (plans for security="none").
+    QKD key registry (e.g. the trainer's) so plan seeds match its pads.
+    Whenever a registry exists (passed in, or created for
+    ``with_seeds=True``), the compiled :class:`EdgeSchedule` also carries
+    per-(round, edge) key material — every edge established in one
+    batched BB84 dispatch. ``with_seeds=False`` without a keymgr skips
+    BB84 entirely (plans for security="none").
     """
     t_idx = round_steps(trace, fl.n_rounds, round_stride)
     R, N = fl.n_rounds, trace.n_sats
@@ -173,10 +324,16 @@ def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
 
     waits = _window_waits(trace, t_idx, assignment, prim)
 
+    if keymgr is None and with_seeds:
+        keymgr = KeyManager(jax.random.PRNGKey(fl.seed + 7),
+                            n_qkd_bits=fl.qkd_bits)
     if with_seeds:
         seeds = _seed_schedule(trace, t_idx, assignment, prim, fl, keymgr)
     else:
         seeds = np.zeros((R, N), np.uint32)
+    # the secure-exchange plane: key material rides along whenever a key
+    # registry exists (callers running security="none" pass neither)
+    edges = _edge_schedule(fl, assignment, prim, waits, keymgr)
 
     if fl.weight_by_samples and sample_counts is not None:
         weights = np.asarray(sample_counts, np.float32)
@@ -197,4 +354,5 @@ def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
         group_size=group_size,
         seeds=seeds,
         weights=weights,
+        edges=edges,
     )

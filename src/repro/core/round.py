@@ -25,6 +25,20 @@ sample through the same bounded sampler, so they see identical data and
 agree to float-accumulation tolerance (tests enforce ≤ 1e-6 on metrics,
 exact equality on comm accounting). A custom ``sample_batch`` (whose
 signature has no padding bound) forces the per-client path.
+
+**Edge-batched secure exchange (default).** With ``security`` in
+{``qkd``, ``qkd_fernet``} the per-edge Algorithm-2 loop — BB84
+establishment, pad expansion, OTP-XOR, MAC — used to dispatch once per
+(sender, receiver) edge, making the security plane the round's serial
+bottleneck. ``edge_batched=True`` consumes the plan's compiled
+:class:`~repro.core.plan.EdgeSchedule` instead: all edge keys are
+established in ONE vmapped BB84 at plan compile, and each round stage
+encrypts/tags/verifies/decrypts every edge's stream in ONE stacked
+dispatch (``encrypt_tree_rows`` + ``poly_mac_rows`` over the fixed
+dispatch frame). Ciphertexts and MAC tags are bit-identical per edge to
+the per-edge oracle (``edge_batched=False``), comm/security accounting is
+exactly equal, and QBER aborts / MAC failures surface per edge
+(``SecurityError.edges``; ``fl.on_qber_abort`` picks raise-vs-drop).
 """
 from __future__ import annotations
 
@@ -44,10 +58,21 @@ from repro.core.localtrain import (
 from repro.core.plan import RoundPlan, compile_round_plan
 from repro.nn.optim import get_optimizer, inv_sqrt_schedule, constant_schedule
 from repro.nn.pytree import tree_bytes, tree_weighted_sum
-from repro.security.keys import KeyManager
-from repro.security.mac import poly_mac_u32, mac_verify
-from repro.security.otp import decrypt_tree, encrypt_tree, tree_to_u32
+from repro.security.errors import SecurityError
+from repro.security.keys import KeyManager, canonical_edge
+from repro.security.mac import (mac_verify, mac_verify_rows, poly_mac_rows,
+                                poly_mac_u32)
+from repro.security.otp import (decrypt_tree, decrypt_tree_rows, encrypt_tree,
+                                encrypt_tree_rows, tree_to_u32,
+                                tree_to_u32_rows)
 from repro.quantum.teleport import teleport_params
+
+
+# receiver-side batched MAC check — module-level so tests can simulate a
+# tampered stage. NOTE: it is read at TRACE time of _secure_stage_impl, so
+# a patch only takes effect for trainers that have not yet run a secure
+# stage (patch before the first run_round)
+_mac_rows_verify = mac_verify_rows
 
 
 def default_sample_batch(data: dict, key, batch_size: int) -> dict:
@@ -96,7 +121,7 @@ class SatQFLTrainer:
                  server_data: dict, comm: CommModel | None = None,
                  sample_batch=default_sample_batch,
                  eavesdrop_edges: frozenset = frozenset(),
-                 batched: bool = True):
+                 batched: bool = True, edge_batched: bool = True):
         self.model_cfg = model_cfg
         self.api = api
         self.fl = fl
@@ -158,22 +183,34 @@ class SatQFLTrainer:
                                  n_qkd_bits=fl.qkd_bits,
                                  eavesdrop_edges=eavesdrop_edges)
         self._qkd_established: set = set()
+        self.aborted_edges: set = set()         # QBER aborts, per edge
         self.pending: dict[int, list] = {}      # async: main -> [(params, w, born)]
         self.log = CommLog()
         self.history: list[RoundMetrics] = []
+        # the edge-batched secure plane covers the OTP(+MAC) modes; the
+        # per-edge loop stays as the numerics/accounting oracle
+        self.edge_batched = (edge_batched
+                             and fl.security in ("qkd", "qkd_fernet"))
 
         self._local_train = make_local_train(api, model_cfg, fl, self.opt)
         self._jit_local = jax.jit(self._local_train_impl)
         self._batched_train = make_batched_local_train(api, model_cfg, fl,
                                                        self.opt)
         self._jit_stage = jax.jit(self._batched_stage_impl)
+        self._jit_secure = jax.jit(self._secure_stage_impl)
+        self._jit_dev_eval = jax.jit(self._dev_eval_impl)
         # the whole schedule — roles, assignments, participation, window
-        # waits, FedAvg weights — is compiled from the trace once up front;
-        # no seed schedule: this engine derives pads live from the
-        # KeyManager inside _exchange (QBER/abort semantics need it)
+        # waits, FedAvg weights, and the secure-exchange EdgeSchedule — is
+        # compiled from the trace once up front. For the OTP(+MAC) modes
+        # the trainer's KeyManager rides along so every edge key is
+        # established in one batched BB84 and the plan's per-(round, edge)
+        # seeds/MAC keys/abort masks match the live registry exactly;
+        # teleport keeps deriving live in _exchange (sequential RNG).
         self.plan: RoundPlan = compile_round_plan(
             trace, fl,
             sample_counts=counts,
+            keymgr=(self.keymgr if fl.security in ("qkd", "qkd_fernet")
+                    else None),
             with_seeds=False)
 
     # ------------------------------------------------------------------
@@ -267,18 +304,48 @@ class SatQFLTrainer:
         return p, losses
 
     # ------------------------------------------------------------------
+    # evaluation
+    # ------------------------------------------------------------------
+    def _dev_eval_impl(self, params, data, n):
+        """Batched device-metric pass: masked per-client (loss, acc) over
+        the first ≤64 (padded) samples — the padded tail carries exact
+        zero weight, so each row equals the unpadded per-client metric."""
+        m_cap = min(64, next(iter(data.values())).shape[1])
+
+        def one(d, nn):
+            b = {k: v[:m_cap] for k, v in d.items()}
+            logits, _ = self.api.forward(self.model_cfg, params, b)
+            labels = b["labels"]
+            lf = logits.astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(lf, axis=-1)
+            ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+            valid = (jnp.arange(m_cap) < jnp.minimum(nn, m_cap)).astype(
+                jnp.float32)
+            cnt = jnp.maximum(jnp.sum(valid), 1.0)
+            loss = jnp.sum((lse - ll) * valid) / cnt
+            acc = jnp.sum((jnp.argmax(lf, -1) == labels).astype(jnp.float32)
+                          * valid) / cnt
+            return loss, acc
+
+        return jax.vmap(one)(data, n)
+
+    # ------------------------------------------------------------------
     # secure exchange (Algorithm 2) — returns params as seen by receiver
     # ------------------------------------------------------------------
     def _exchange(self, params, edge: tuple, round_idx: int, link: str,
                   concurrent: int = 1):
+        """Per-edge Algorithm 2 — the numerics/accounting oracle for the
+        edge-batched plane. Returns (params_as_received, wall_s); params
+        is None when the edge QBER-aborted under on_qber_abort='drop'."""
         fl = self.fl
         nbytes = tree_bytes(params)
-        t = (self.comm.isl_transfer(nbytes, concurrent) if link == "isl"
-             else self.comm.feeder_transfer(nbytes, concurrent))
-        self.log.count_transfer(nbytes)   # wall time recorded per round
         if fl.security == "none":
+            t = (self.comm.isl_transfer(nbytes, concurrent) if link == "isl"
+                 else self.comm.feeder_transfer(nbytes, concurrent))
+            self.log.count_transfer(nbytes)   # wall time recorded per round
             return params, t
 
+        t = 0.0
         ek = self.keymgr.get(edge)
         if ek.edge not in self._qkd_established:
             self._qkd_established.add(ek.edge)
@@ -286,8 +353,17 @@ class SatQFLTrainer:
             self.log.add_security(tq)
             t += tq
         if ek.compromised:
-            # eavesdropping detected at key establishment: drop this link
-            raise ConnectionAbortedError(f"QBER abort on edge {ek.edge}")
+            # eavesdropping detected at key establishment: the edge aborts
+            # BEFORE any data moves (nothing counted for this transfer)
+            self.aborted_edges.add(ek.edge)
+            if fl.on_qber_abort == "raise":
+                raise SecurityError(f"QBER abort on edge {ek.edge}",
+                                    edges=[ek.edge])
+            return None, t                    # drop: sat leaves C(t)
+
+        t += (self.comm.isl_transfer(nbytes, concurrent) if link == "isl"
+              else self.comm.feeder_transfer(nbytes, concurrent))
+        self.log.count_transfer(nbytes)   # wall time recorded per round
 
         if fl.security in ("qkd", "qkd_fernet"):
             seed = ek.round_seed(round_idx)
@@ -296,7 +372,9 @@ class SatQFLTrainer:
                 r, s = ek.mac_keys(round_idx)
                 stream = tree_to_u32(ct)
                 tag = poly_mac_u32(stream, r, s)
-                assert bool(mac_verify(stream, tag, r, s)), "MAC mismatch"
+                if not bool(mac_verify(stream, tag, r, s)):
+                    raise SecurityError(f"MAC mismatch on edge {ek.edge}",
+                                        edges=[ek.edge])
             tc = 2 * self.comm.crypto_time(nbytes)
             if fl.security == "qkd_fernet":
                 # control-plane metadata rides in a Fernet token (paper's
@@ -306,7 +384,10 @@ class SatQFLTrainer:
                 fkey = int(seed).to_bytes(4, "big") * 8
                 meta = f"edge={ek.edge} round={round_idx} n={nbytes}".encode()
                 tok = fernet_encrypt(fkey, meta)
-                assert fernet_decrypt(fkey, tok) == meta
+                if fernet_decrypt(fkey, tok) != meta:
+                    raise SecurityError(
+                        f"Fernet token corrupt on edge {ek.edge}",
+                        edges=[ek.edge])
                 tc += 2 * self.comm.crypto_time(len(tok))
             self.log.add_security(tc)
             t += tc
@@ -328,17 +409,118 @@ class SatQFLTrainer:
             return params, t
         raise ValueError(fl.security)
 
-    def _exchange_rows(self, stacked, ids: list[int], edges: list[tuple],
-                       r: int, link: str, concurrents=None):
-        """Per-row Algorithm-2 exchange over a stacked (K, ...) tree.
+    def _secure_stage_impl(self, stacked, seeds, mac_r, mac_s):
+        """ONE edge-batched Algorithm-2 dispatch over the dispatch frame:
+        per-row pad expansion + OTP-XOR (encrypt), stacked wire streams,
+        batched MAC tag + verify, decrypt. Rows without an edge carry seed
+        0 and pass through bit-identically (XOR is an involution)."""
+        ct = encrypt_tree_rows(stacked, seeds)
+        if self.fl.verify_mac:
+            streams = tree_to_u32_rows(ct)
+            tags = poly_mac_rows(streams, mac_r, mac_s)
+            # receiver-side recompute over the received streams
+            ok = _mac_rows_verify(streams, tags, mac_r, mac_s)
+        else:
+            ok = jnp.ones((seeds.shape[0],), bool)
+        return decrypt_tree_rows(ct, seeds), ok
+
+    def _exchange_rows_batched(self, stacked, rows, edges, r: int,
+                               stage: int, link: str, conc):
+        """Edge-batched Algorithm 2 for one round stage.
+
+        Key material, first-contact and abort masks come from the
+        compiled EdgeSchedule; the device work for ALL edges is one
+        stacked dispatch. The scalar accounting walks edges in the exact
+        per-edge-oracle order, so comm/security totals are equal to the
+        float, not just close.
+        """
+        fl = self.fl
+        es = self.plan.edges
+        lo, hi = es.stage_bounds(r, stage)
+        assert hi - lo == len(edges), (r, stage, hi - lo, len(edges))
+        nbytes = self._row_nbytes
+        tq = self.comm.qkd_time(fl.qkd_bits)
+        walls, delivered = [], []
+        for j, edge in enumerate(edges):
+            e = es.edge_tuple(r, lo + j)
+            # link/concurrency come from the compiled schedule; the
+            # cross-checks catch any drift between plan and engine
+            c = int(es.conc[r, lo + j])
+            assert e == canonical_edge(edge), (e, edge)
+            assert c == conc[j] and link == ("feeder" if es.link[r, lo + j]
+                                             else "isl"), (e, link, conc[j])
+            t = 0.0
+            if es.first[r, lo + j]:
+                self._qkd_established.add(e)
+                self.log.add_security(tq)
+                t += tq
+            if es.abort[r, lo + j]:
+                self.aborted_edges.add(e)
+                if fl.on_qber_abort == "raise":
+                    raise SecurityError(f"QBER abort on edge {e}", edges=[e])
+                walls.append(t)
+                delivered.append(False)
+                continue
+            t += (self.comm.isl_transfer(nbytes, c) if link == "isl"
+                  else self.comm.feeder_transfer(nbytes, c))
+            self.log.count_transfer(nbytes)
+            tc = 2 * self.comm.crypto_time(nbytes)
+            if fl.security == "qkd_fernet":
+                # control-plane token stays per edge: host-side hashlib
+                # bytes work, not device dispatch
+                from repro.security.fernet_lite import (fernet_decrypt,
+                                                        fernet_encrypt)
+                fkey = int(es.seed[r, lo + j]).to_bytes(4, "big") * 8
+                meta = f"edge={e} round={r} n={nbytes}".encode()
+                tok = fernet_encrypt(fkey, meta)
+                if fernet_decrypt(fkey, tok) != meta:
+                    raise SecurityError(
+                        f"Fernet token corrupt on edge {e}", edges=[e])
+                tc += 2 * self.comm.crypto_time(len(tok))
+            self.log.add_security(tc)
+            t += tc
+            walls.append(t)
+            delivered.append(True)
+
+        # device plane: one dispatch for the whole stage, row-aligned on
+        # the fixed frame (non-edge / aborted rows get seed 0 → identity)
+        K = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        seeds = np.zeros((K,), np.uint32)
+        mr = np.zeros((K,), np.uint32)
+        ms = np.zeros((K,), np.uint32)
+        live_rows = []
+        for j, row in enumerate(rows):
+            if delivered[j]:
+                seeds[row] = es.seed[r, lo + j]
+                mr[row] = es.mac_r[r, lo + j]
+                ms[row] = es.mac_s[r, lo + j]
+                live_rows.append((row, edges[j]))
+        out, ok = self._jit_secure(stacked, jnp.asarray(seeds),
+                                   jnp.asarray(mr), jnp.asarray(ms))
+        if fl.verify_mac and live_rows:
+            ok = np.asarray(ok)
+            bad = [canonical_edge(e) for row, e in live_rows if not ok[row]]
+            if bad:
+                raise SecurityError(f"MAC mismatch on edges {bad}",
+                                    edges=bad)
+        return out, walls, delivered
+
+    def _exchange_rows(self, stacked, rows: list[int], edges: list[tuple],
+                       r: int, stage: int, link: str, concurrents=None):
+        """Algorithm-2 exchange over rows of a stacked (K, ...) tree.
+
+        ``rows[j]`` is the stacked-tree row carrying ``edges[j]``'s
+        payload. Returns (stacked, walls, delivered) — delivered[j] False
+        for QBER-dropped edges (their rows pass through untouched and the
+        caller masks them out of aggregation).
 
         security='none' never touches the tensors — accounting only (the
-        stacked aggregate stays on device, zero host round-trips). Other
-        modes run the full per-edge exchange on row slices so QKD
-        establishment, QBER aborts, MAC checks and timing are identical to
-        the per-client loop.
+        stacked aggregate stays on device, zero host round-trips). The
+        OTP(+MAC) modes run ONE edge-batched dispatch per stage
+        (``edge_batched=True``, the default) or the per-edge oracle loop
+        on row slices — identical bits, identical accounting.
         """
-        k = len(ids)
+        k = len(edges)
         conc = concurrents or [1] * k
         walls = []
         if self.fl.security == "none":
@@ -348,20 +530,26 @@ class SatQFLTrainer:
                      else self.comm.feeder_transfer(self._row_nbytes, c))
                 self.log.count_transfer(self._row_nbytes)
                 walls.append(t)
-            return stacked, walls
-        rows = []
+            return stacked, walls, [True] * k
+        if self.edge_batched:
+            return self._exchange_rows_batched(stacked, rows, edges, r,
+                                               stage, link, conc)
+        out_rows, delivered = [], []
         for j, (edge, c) in enumerate(zip(edges, conc)):
-            p_j = jax.tree_util.tree_map(lambda x: x[j], stacked)
+            p_j = jax.tree_util.tree_map(lambda x: x[rows[j]], stacked)
             p_j, t = self._exchange(p_j, edge, r, link, c)
-            rows.append(p_j)
+            delivered.append(p_j is not None)
+            out_rows.append(p_j)
             walls.append(t)
-        # one restack (+ pad-row carry-over), not one full-tree copy per row
-        exchanged = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rows)
-        stacked = jax.tree_util.tree_map(
-            lambda ex, full: (jnp.concatenate([ex, full[k:]])
-                              if full.shape[0] > k else ex),
-            exchanged, stacked)
-        return stacked, walls
+        live = [j for j in range(k) if delivered[j]]
+        if live:
+            # one gather-scatter, not one full-tree copy per row
+            idx = jnp.asarray([rows[j] for j in live])
+            exchanged = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *[out_rows[j] for j in live])
+            stacked = jax.tree_util.tree_map(
+                lambda full, new: full.at[idx].set(new), stacked, exchanged)
+        return stacked, walls, delivered
 
     # ------------------------------------------------------------------
     # shared aggregation + accounting helpers (all schedulers use these)
@@ -391,11 +579,17 @@ class SatQFLTrainer:
         # the chain is SERIAL: wall = sum of hop transfers
         theta = self.global_params
         chain_wall = 0.0
+        delivered = 0
         for s in secs:
+            prev = theta
             theta, _ = self._train_sat(s, theta, r)
             theta, t = self._exchange(theta, (s, main), r, "isl")
             chain_wall += t
-        return theta, chain_wall, 0.0, len(secs)
+            if theta is None:
+                theta = prev        # hop QBER-aborted: chain reverts
+            else:
+                delivered += 1
+        return theta, chain_wall, 0.0, delivered
 
     def _merge_sim(self, r: int, main: int, secs: list):
         # parallel uploads CONTEND for the main's ISL aperture
@@ -406,11 +600,13 @@ class SatQFLTrainer:
             p, t = self._exchange(p, (s, main), r, "isl",
                                   concurrent=max(len(secs), 1))
             up_walls.append(t)
+            if p is None:
+                continue            # QBER abort: update dropped
             collected.append(p)
             ws.append(self._weight_of(s))
         merged = (self._aggregate(collected, ws) if collected
                   else self.global_params)
-        return merged, max(up_walls), 0.0, len(secs)
+        return merged, max(up_walls), 0.0, len(collected)
 
     def _merge_async(self, r: int, main: int, secs: list):
         q = self.pending.setdefault(main, [])
@@ -423,6 +619,8 @@ class SatQFLTrainer:
             waits.append(min(wait, self.comm.window_wait_s))
             p, t = self._exchange(p, (s, main), r, "isl")
             up_walls.append(t)
+            if p is None:
+                continue                    # QBER abort: update dropped
             q.append((p, self._weight_of(s), r))
         # aggregate deliveries within Δ_max (bounded staleness)
         fresh = [(p, w, born) for (p, w, born) in q
@@ -455,15 +653,17 @@ class SatQFLTrainer:
             secs_all, self._broadcast_global(sp), r)
         conc = [max(len(groups[m]), 1) for m in mains for _ in groups[m]]
         edges = [(s, m) for m in mains for s in groups[m]]
-        p, walls = self._exchange_rows(p, secs_all, edges, r, "isl", conc)
+        p, walls, delivered = self._exchange_rows(
+            p, list(range(len(secs_all))), edges, r, 0, "isl", conc)
         # masked weighted group reduction over the stacked client axis
         # (padded to bucket shapes so the reduction compiles once per
-        # bucket, not once per round)
+        # bucket, not once per round); QBER-dropped rows carry no weight
         a = np.zeros((mp, sp), np.float32)
         j = 0
         for g, m in enumerate(mains):
             for s in groups[m]:
-                a[g, j] = self._weight_of(s)
+                if delivered[j]:
+                    a[g, j] = self._weight_of(s)
                 group_walls[g] = max(group_walls[g], walls[j])
                 j += 1
         row_sum = a.sum(axis=1, keepdims=True)
@@ -477,7 +677,7 @@ class SatQFLTrainer:
             return jnp.where(k, g.astype(jnp.float32), m).astype(x.dtype)
 
         merged = jax.tree_util.tree_map(_merge, p, self._broadcast_global(mp))
-        return merged, group_walls, [0.0], len(secs_all)
+        return merged, group_walls, [0.0], int(sum(delivered))
 
     def _merge_async_batched(self, r: int, mains: list, groups: dict,
                              mp: int):
@@ -486,9 +686,12 @@ class SatQFLTrainer:
             p, _ = self._train_group_batched(
                 secs_all, self._broadcast_global(self._frame), r)
         group_walls, group_waits = [0.0] * len(mains), [0.0] * len(mains)
+        # window filter precedes the exchange stage (matches the plan's
+        # async edge schedule: windowless secondaries never exchange)
+        rows, edges, row_group = [], [], []
         j = 0
         for g, m in enumerate(mains):
-            q = self.pending.setdefault(m, [])
+            self.pending.setdefault(m, [])
             for s in groups[m]:
                 row = j
                 j += 1
@@ -497,10 +700,19 @@ class SatQFLTrainer:
                     continue                # no window in trace: update dropped
                 group_waits[g] = max(group_waits[g],
                                      min(wait, self.comm.window_wait_s))
-                p_s = jax.tree_util.tree_map(lambda x: x[row], p)
-                p_s, t = self._exchange(p_s, (s, m), r, "isl")
+                rows.append(row)
+                edges.append((s, m))
+                row_group.append(g)
+        ok = []
+        if rows:
+            p, walls, ok = self._exchange_rows(p, rows, edges, r, 0, "isl")
+            for t, g in zip(walls, row_group):
                 group_walls[g] = max(group_walls[g], t)
-                q.append((p_s, self._weight_of(s), r))
+            for d, row, (s, m) in zip(ok, rows, edges):
+                if not d:
+                    continue                # QBER abort: update dropped
+                p_s = jax.tree_util.tree_map(lambda x: x[row], p)
+                self.pending[m].append((p_s, self._weight_of(s), r))
         merged_rows, delivered = [], 0
         for m in mains:
             q = self.pending.get(m, [])
@@ -526,12 +738,13 @@ class SatQFLTrainer:
         n_chains = len(mains)
         theta = self._broadcast_global(mp)
         chain_walls = [0.0] * n_chains
-        delivered = sum(len(c) for c in chains)
+        delivered = 0
         for hop in range(max((len(c) for c in chains), default=0)):
             active = np.array([len(c) > hop for c in chains]
                               + [False] * (mp - n_chains))
             ids = [c[hop] if len(c) > hop else mains[g]
                    for g, c in enumerate(chains)]
+            theta_prev = theta
             p_new, _ = self._train_group_batched(ids, theta, r,
                                                  update_opt=active[:n_chains],
                                                  pad_to=mp)
@@ -545,20 +758,22 @@ class SatQFLTrainer:
                 for g in act_rows:
                     chain_walls[g] += self.comm.isl_transfer(self._row_nbytes)
                     self.log.count_transfer(self._row_nbytes)
+                delivered += len(act_rows)
             else:
-                rows = []
-                for g in act_rows:
-                    p_g = jax.tree_util.tree_map(lambda x: x[g], theta)
-                    p_g, t = self._exchange(p_g, (chains[g][hop], mains[g]),
-                                            r, "isl")
+                edges = [(chains[g][hop], mains[g]) for g in act_rows]
+                theta, walls, ok = self._exchange_rows(theta, act_rows,
+                                                       edges, r, hop, "isl")
+                for t, g in zip(walls, act_rows):
                     chain_walls[g] += t
-                    rows.append(p_g)
-                # one gather-scatter per hop, not one tree copy per chain
-                idx = jnp.asarray(act_rows)
-                exchanged = jax.tree_util.tree_map(
-                    lambda *xs: jnp.stack(xs), *rows)
-                theta = jax.tree_util.tree_map(
-                    lambda full, new: full.at[idx].set(new), theta, exchanged)
+                dropped = [g for g, d in zip(act_rows, ok) if not d]
+                if dropped:
+                    # hop QBER-aborted: those chains revert to their
+                    # pre-hop state (the trained update never arrived)
+                    idx = jnp.asarray(dropped)
+                    theta = jax.tree_util.tree_map(
+                        lambda full, old: full.at[idx].set(old[idx]),
+                        theta, theta_prev)
+                delivered += int(sum(ok))
         return theta, chain_walls, [0.0], delivered
 
     _BATCHED_SCHEDULERS = {"seq": _merge_seq_batched,
@@ -576,24 +791,27 @@ class SatQFLTrainer:
             npad = self._frame
             p, _ = self._train_group_batched(
                 ids, self._broadcast_global(npad), r)
-            p, walls = self._exchange_rows(p, ids,
-                                           [("gs", s) for s in ids],
-                                           r, "feeder")
+            p, walls, delivered = self._exchange_rows(
+                p, ids, [("gs", s) for s in ids], r, 0, "feeder")
             self.log.add_wall(2 * max([0.0] + walls))
             w = np.zeros((npad,), np.float32)
-            w[:self.n_sats] = self.plan.weights
-            self.global_params = self._wmean_rows(p, w)
-            return self.n_sats
+            w[:self.n_sats] = np.where(delivered, self.plan.weights, 0.0)
+            if any(delivered):
+                self.global_params = self._wmean_rows(p, w)
+            return int(sum(delivered))
         updates, ws, walls = [], [], [0.0]
         for s in range(self.n_sats):
             p, _ = self._train_sat(s, self.global_params, r)
             p, t = self._exchange(p, ("gs", s), r, "feeder")
             walls.append(t)
+            if p is None:
+                continue                    # QBER abort: update dropped
             updates.append(p)
             ws.append(self._weight_of(s))
         self.log.add_wall(2 * max(walls))   # up + broadcast down
-        self.global_params = self._aggregate(updates, ws)
-        return self.n_sats
+        if updates:
+            self.global_params = self._aggregate(updates, ws)
+        return len(updates)
 
     def _round_hierarchical(self, r: int) -> int:
         """Algorithm 1 proper: per-group merge (mode-specific), optional
@@ -613,6 +831,8 @@ class SatQFLTrainer:
                 participants += 1
             merged, t = self._exchange(merged, (main, "gs"), r, "feeder")
             feeder_walls.append(t)
+            if merged is None:
+                continue                    # feeder QBER abort: group lost
             main_models.append(merged)
             main_ws.append(self._weight_of(main)
                            + sum(self._weight_of(s) for s in secs))
@@ -645,14 +865,20 @@ class SatQFLTrainer:
             merged, _ = self._train_group_batched(mains, merged, r,
                                                   pad_to=mp)
             participants += len(mains)
-        merged, feeder_walls = self._exchange_rows(
-            merged, mains, [(m, "gs") for m in mains], r, "feeder")
-        # pad rows carry zero weight -> the padded reduction is exact
+        feeder_stage = int(self.plan.edges.n_stages[r]) - 1
+        merged, feeder_walls, fdel = self._exchange_rows(
+            merged, list(range(len(mains))), [(m, "gs") for m in mains], r,
+            feeder_stage, "feeder")
+        # pad rows carry zero weight -> the padded reduction is exact;
+        # feeder-aborted mains contribute nothing (their group is lost)
         main_ws = np.zeros((mp,), np.float32)
-        main_ws[:len(mains)] = [self._weight_of(m)
-                                + sum(self._weight_of(s) for s in groups[m])
-                                for m in mains]
-        self.global_params = self._wmean_rows(merged, main_ws)
+        main_ws[:len(mains)] = [
+            (self._weight_of(m)
+             + sum(self._weight_of(s) for s in groups[m])) if fdel[g]
+            else 0.0
+            for g, m in enumerate(mains)]
+        if any(fdel):
+            self.global_params = self._wmean_rows(merged, main_ws)
         self.log.add_wait(max([0.0] + group_waits))
         self.log.add_wall(max([0.0] + group_walls)
                           + 2 * max([0.0] + feeder_walls))
@@ -693,14 +919,15 @@ class SatQFLTrainer:
             _, m.server_test_acc = evaluate(
                 self.api, self.model_cfg, self.global_params,
                 self.server_data["test"])
-            dev_tr, dev_te, dev_vl = [], [], []
-            for s in range(min(self.n_sats, 8)):       # sampled device metrics
-                l, a = evaluate(self.api, self.model_cfg, self.global_params,
-                                {k: v[:64] for k, v in self.sat_data[s].items()})
-                dev_tr.append(a)
-                dev_vl.append(l)
-            m.dev_train_acc = float(np.mean(dev_tr))
-            m.dev_val_loss = float(np.mean(dev_vl))
+            # sampled device metrics: ONE vmapped dispatch over the first
+            # S stacked client datasets instead of S sequential host calls
+            S = min(self.n_sats, 8)
+            dev_vl, dev_tr = self._jit_dev_eval(
+                self.global_params,
+                {k: v[:S] for k, v in self._data_stacked.items()},
+                self._n_samples[:S])
+            m.dev_train_acc = float(np.mean(np.asarray(dev_tr)))
+            m.dev_val_loss = float(np.mean(np.asarray(dev_vl)))
             m.dev_test_acc = m.server_test_acc
         self.history.append(m)
         return m

@@ -13,10 +13,10 @@ Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 ``ref.py`` (pure-jnp oracle; also the backward path where the kernel is
 forward-only). Tests sweep shapes/dtypes and assert allclose vs ref.
 """
-from repro.kernels.otp_xor.ops import otp_xor_mac
+from repro.kernels.otp_xor.ops import otp_xor_mac, otp_xor_mac_edges
 from repro.kernels.statevec_gate.ops import apply_gate, apply_gate_layer
 from repro.kernels.swa_attention.ops import swa_attention
 from repro.kernels.ssd_scan.ops import ssd_scan
 
-__all__ = ["otp_xor_mac", "apply_gate", "apply_gate_layer", "swa_attention",
-           "ssd_scan"]
+__all__ = ["otp_xor_mac", "otp_xor_mac_edges", "apply_gate",
+           "apply_gate_layer", "swa_attention", "ssd_scan"]

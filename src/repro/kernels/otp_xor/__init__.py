@@ -1,3 +1,3 @@
-from repro.kernels.otp_xor.ops import otp_xor_mac
+from repro.kernels.otp_xor.ops import otp_xor_mac, otp_xor_mac_edges
 
-__all__ = ["otp_xor_mac"]
+__all__ = ["otp_xor_mac", "otp_xor_mac_edges"]

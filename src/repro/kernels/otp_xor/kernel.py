@@ -79,6 +79,54 @@ def _otp_mac_kernel(msg_ref, pad_ref, pw_ref, ct_ref, tag_ref):
     tag_ref[0, 0] = _sum_mod_all(terms)
 
 
+def _otp_mac_edge_kernel(msg_ref, pad_ref, pw_ref, ct_ref, tag_ref):
+    """Same fused XOR+MAC body as ``_otp_mac_kernel``, lifted to an edge
+    axis: blocks are (1, 1, R, C) slices of the (E, nb, R, C) streams and
+    the key-power table is per edge ((1, 2, R, C) — each edge has its own
+    evaluation point r)."""
+    msg = msg_ref[0, 0]
+    pad = pad_ref[0, 0]
+    ct = msg ^ pad
+    ct_ref[0, 0] = ct
+    lo = (ct & MASK16) + 1          # MAC symbols (+1 padding-proof)
+    hi = (ct >> 16) + 1
+    terms = _addmod(_mulmod(lo, pw_ref[0, 0]), _mulmod(hi, pw_ref[0, 1]))
+    tag_ref[0, 0] = _sum_mod_all(terms)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def otp_xor_mac_edge_blocks(msg: jax.Array, pad: jax.Array,
+                            powers: jax.Array, block_rows: int = 128,
+                            interpret: bool = True):
+    """Edge-batched entry: msg/pad (E, nb, R, 128); powers (E, 2, R, 128).
+
+    Grid (E, nb) — edges × word blocks — so one kernel launch streams
+    EVERY edge's ciphertext and partial tags of a round stage. Returns
+    (ct same shape, tags (E, nb) uint32 per-(edge, block) partials).
+    """
+    E, nb, R, C = msg.shape
+    assert C == 128 and R == block_rows and powers.shape == (E, 2, R, C)
+    ct, tags = pl.pallas_call(
+        _otp_mac_edge_kernel,
+        grid=(E, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, C), lambda e, i: (e, i, 0, 0)),
+            pl.BlockSpec((1, 1, R, C), lambda e, i: (e, i, 0, 0)),
+            pl.BlockSpec((1, 2, R, C), lambda e, i: (e, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, R, C), lambda e, i: (e, i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda e, i: (e, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((E, nb, R, C), jnp.uint32),
+            jax.ShapeDtypeStruct((E, nb), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(msg, pad, powers)
+    return ct, tags
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def otp_xor_mac_blocks(msg: jax.Array, pad: jax.Array, powers: jax.Array,
                        block_rows: int = 128, interpret: bool = True):

@@ -14,6 +14,23 @@ def otp_xor_mac_ref(msg_u32: jax.Array, pad_u32: jax.Array, r_key, s_key):
     return ct, poly_mac_u32(ct, r_key, s_key)
 
 
+def otp_xor_mac_edge_blocks_ref(msg, pad, powers):
+    """Edge-batched block oracle: msg/pad (E, nb, R, C); powers
+    (E, 2, R, C) → (ct, partial tags (E, nb))."""
+    ct = msg ^ pad
+    lo = (ct & jnp.uint32(0xFFFF)) + jnp.uint32(1)
+    hi = (ct >> 16) + jnp.uint32(1)
+    terms = addmod(mulmod(lo, powers[:, None, 0]),
+                   mulmod(hi, powers[:, None, 1]))
+    flat = terms.reshape(terms.shape[0], terms.shape[1], -1)
+    n = flat.shape[2]
+    while n > 1:
+        half = n // 2
+        flat = addmod(flat[:, :, :half], flat[:, :, half:n])
+        n = half
+    return ct, flat[:, :, 0]
+
+
 def otp_xor_mac_blocks_ref(msg, pad, powers):
     """Block-level oracle matching the kernel's intermediate contract:
     msg/pad (nb, R, C); powers (2, R, C) -> (ct, partial tags (nb,))."""

@@ -21,6 +21,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class BB84Result(NamedTuple):
@@ -61,8 +62,16 @@ def _prepare(bits, bases):
     return jnp.stack([a0, a1], axis=-1).astype(jnp.complex64)
 
 
-def bb84_keygen(key: jax.Array, n_bits: int, eavesdrop: bool = False) -> BB84Result:
-    """Run BB84 over n_bits channel uses."""
+def _bb84_impl(key: jax.Array, n_bits: int, eavesdrop) -> BB84Result:
+    """Traceable BB84 body: ``eavesdrop`` may be a traced bool scalar.
+
+    Under a trace (the vmapped edge batch), the eavesdropper branch is
+    always *computed* and selected with a ``where`` — the keys are
+    pre-split, so the clean path consumes exactly the same key material
+    as a concrete ``eavesdrop=False`` call and the batch is bit-identical
+    to per-edge calls. A concrete Python bool skips the unused branch
+    (no point simulating the attack on a known-clean edge).
+    """
     ks = jax.random.split(key, 6)
     bits = jax.random.bernoulli(ks[0], 0.5, (n_bits,)).astype(jnp.int32)
     bases_a = jax.random.bernoulli(ks[1], 0.5, (n_bits,)).astype(jnp.int32)
@@ -70,10 +79,19 @@ def bb84_keygen(key: jax.Array, n_bits: int, eavesdrop: bool = False) -> BB84Res
 
     states = _prepare(bits, bases_a)
 
-    if eavesdrop:
-        bases_e = jax.random.bernoulli(ks[3], 0.5, (n_bits,)).astype(jnp.int32)
+    if isinstance(eavesdrop, (bool, np.bool_)):
+        if eavesdrop:
+            bases_e = jax.random.bernoulli(ks[3], 0.5,
+                                           (n_bits,)).astype(jnp.int32)
+            eve_bits = _measure_1q(ks[4], states, bases_e)
+            states = _prepare(eve_bits, bases_e)     # intercept-resend
+    else:
+        bases_e = jax.random.bernoulli(ks[3], 0.5,
+                                       (n_bits,)).astype(jnp.int32)
         eve_bits = _measure_1q(ks[4], states, bases_e)
-        states = _prepare(eve_bits, bases_e)     # intercept-resend
+        eve_states = _prepare(eve_bits, bases_e)     # intercept-resend
+        eav = jnp.asarray(eavesdrop, bool)
+        states = jnp.where(eav[..., None, None], eve_states, states)
 
     recv_bits = _measure_1q(ks[5], states, bases_b)
 
@@ -89,8 +107,33 @@ def bb84_keygen(key: jax.Array, n_bits: int, eavesdrop: bool = False) -> BB84Res
                       receiver_bits=recv_bits, qber=qber)
 
 
+def bb84_keygen(key: jax.Array, n_bits: int, eavesdrop: bool = False) -> BB84Result:
+    """Run BB84 over n_bits channel uses (single edge)."""
+    return _bb84_impl(key, n_bits, eavesdrop)
+
+
+def bb84_keygen_edges(keys: jax.Array, n_bits: int,
+                      eavesdrop: jax.Array) -> BB84Result:
+    """Edge-batched BB84: every field gains a leading edge axis.
+
+    keys (E,) PRNG keys, eavesdrop (E,) bool — each edge's qubit batch is
+    an independent 1-qubit program, so the whole constellation's key
+    establishment is ONE vmapped dispatch. Bit-identical per edge to
+    ``bb84_keygen(keys[e], n_bits, bool(eavesdrop[e]))``.
+    """
+    return jax.vmap(lambda k, e: _bb84_impl(k, n_bits, e))(
+        keys, jnp.asarray(eavesdrop, bool))
+
+
 def qber_estimate(res: BB84Result) -> jax.Array:
     return res.qber
+
+
+def qber_abort_mask(res: BB84Result, threshold: float) -> jax.Array:
+    """Vectorized abort decision: (E,) bool for an edge-batched result —
+    True where intercept-resend noise pushed the edge past the threshold
+    (the per-edge scalar check, lifted to the whole constellation)."""
+    return res.qber > threshold
 
 
 def derive_pad_seed(sifted_key: jax.Array, key_len) -> jax.Array:
@@ -105,3 +148,8 @@ def derive_pad_seed(sifted_key: jax.Array, key_len) -> jax.Array:
     weights = jnp.mod(jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761),
                       jnp.uint32(2 ** 31))
     return jnp.sum(bits * weights, dtype=jnp.uint32)
+
+
+def derive_pad_seeds(sifted_keys: jax.Array, key_lens: jax.Array) -> jax.Array:
+    """Edge-batched ``derive_pad_seed``: (E, n) keys + (E,) lens → (E,)."""
+    return jax.vmap(derive_pad_seed)(sifted_keys, key_lens)

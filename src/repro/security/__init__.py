@@ -14,15 +14,25 @@ Host-side (control plane):
 from repro.security.otp import (
     encrypt_tree, decrypt_tree, encrypt_flat_u32, pad_u32,
     tree_to_u32, u32_to_tree,
+    encrypt_tree_rows, decrypt_tree_rows, pad_u32_rows,
+    tree_to_u32_rows, u32_to_tree_rows,
 )
-from repro.security.mac import poly_mac_u32, mac_verify, P31
-from repro.security.keys import KeyManager, EdgeKey
+from repro.security.mac import (
+    poly_mac_u32, mac_verify, poly_mac_rows, mac_verify_rows, P31,
+)
+from repro.security.keys import (
+    KeyManager, EdgeKey, canonical_edge, mac_key_mix, round_seed_mix,
+)
+from repro.security.errors import SecurityError
 from repro.security.fernet_lite import fernet_encrypt, fernet_decrypt
 
 __all__ = [
     "encrypt_tree", "decrypt_tree", "encrypt_flat_u32", "pad_u32",
     "tree_to_u32", "u32_to_tree",
-    "poly_mac_u32", "mac_verify", "P31",
-    "KeyManager", "EdgeKey",
+    "encrypt_tree_rows", "decrypt_tree_rows", "pad_u32_rows",
+    "tree_to_u32_rows", "u32_to_tree_rows",
+    "poly_mac_u32", "mac_verify", "poly_mac_rows", "mac_verify_rows", "P31",
+    "KeyManager", "EdgeKey", "canonical_edge", "mac_key_mix",
+    "round_seed_mix", "SecurityError",
     "fernet_encrypt", "fernet_decrypt",
 ]

@@ -1,0 +1,17 @@
+"""Security-plane failures (paper Algorithm 2).
+
+``SecurityError`` subclasses ``ConnectionAbortedError`` so existing
+callers that treat a QBER abort as a dropped link keep working, while new
+code can catch the precise type and read which edge(s) failed. Raised —
+never ``assert``-ed, which would vanish under ``python -O`` — for both
+QBER aborts at key establishment and MAC verification failures.
+"""
+from __future__ import annotations
+
+
+class SecurityError(ConnectionAbortedError):
+    """A secure exchange failed; ``edges`` names the offending edge(s)."""
+
+    def __init__(self, message: str, edges=()):
+        super().__init__(message)
+        self.edges = tuple(edges)

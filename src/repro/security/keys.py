@@ -8,6 +8,14 @@ into the edge seed (fresh pad every round — OTP keys never reuse).
 An edge whose QBER exceeds the abort threshold (eavesdropping detected,
 paper §III-B) is marked compromised and its satellite drops from the
 participating set C(t) until re-keyed.
+
+Establishment is edge-batched: ``establish_edges`` runs ONE vmapped BB84
+over every not-yet-established edge (each edge's qubit batch is an
+independent 1-qubit program), with batched sifting/QBER and a vectorized
+abort mask — bit-identical to calling ``establish`` per edge, which stays
+as the oracle path. The per-round seed/MAC-key mixes are shared numpy
+helpers (``round_seed_mix`` / ``mac_key_mix``) so the scalar ``EdgeKey``
+methods and the plan compiler's stacked ``(R, E)`` schedules cannot drift.
 """
 from __future__ import annotations
 
@@ -18,9 +26,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.quantum.qkd import bb84_keygen, derive_pad_seed
+from repro.quantum.qkd import (bb84_keygen, bb84_keygen_edges,
+                               derive_pad_seed, derive_pad_seeds)
 
 QBER_ABORT = 0.11   # standard BB84 abort threshold
+
+
+def round_seed_mix(seeds, round_idx):
+    """Per-(round, edge) pad seed: integer mix of edge seed + round index.
+
+    Vectorized over arbitrary numpy shapes (uint64 intermediates keep the
+    low 32 bits exact); scalar ``EdgeKey.round_seed`` calls the same code.
+    """
+    s = np.asarray(seeds, np.uint64)
+    r = np.asarray(round_idx, np.uint64)
+    return ((s * np.uint64(2654435761))
+            ^ (r * np.uint64(0x9E3779B9))).astype(np.uint32)
+
+
+def mac_key_mix(round_seeds):
+    """(r, s) MAC key pair from per-round seeds; vectorized like the mix."""
+    base = np.asarray(round_seeds, np.uint64)
+    r = (base ^ np.uint64(0xA5A5A5A5)).astype(np.uint32)
+    s = ((base * np.uint64(747796405))
+         + np.uint64(2891336453)).astype(np.uint32)
+    return r, s
+
+
+def canonical_edge(edge: tuple) -> tuple:
+    """Edges are undirected; endpoints may be ints (sats) or strings."""
+    return tuple(sorted(edge, key=str))
 
 
 @dataclass
@@ -33,13 +68,10 @@ class EdgeKey:
     def round_seed(self, round_idx: int) -> np.uint32:
         # host-side integer mix: callers (plan compilation walks every
         # (round, sat) cell) must not pay a device round-trip per seed
-        mix = ((self.seed * 2654435761) ^ (round_idx * 0x9E3779B9)) & 0xFFFFFFFF
-        return np.uint32(mix)
+        return np.uint32(round_seed_mix(self.seed, round_idx))
 
     def mac_keys(self, round_idx: int):
-        base = int(self.round_seed(round_idx))
-        r = np.uint32(base ^ 0xA5A5A5A5)
-        s = np.uint32((base * 747796405 + 2891336453) & 0xFFFFFFFF)
+        r, s = mac_key_mix(self.round_seed(round_idx))
         return jnp.uint32(r), jnp.uint32(s)
 
 
@@ -53,14 +85,16 @@ class KeyManager:
         self.eavesdrop_edges = eavesdrop_edges
         self._edges: dict[tuple, EdgeKey] = {}
 
+    def _edge_key(self, edge: tuple) -> jax.Array:
+        return jax.random.fold_in(self.master_key, hash(edge) & 0x7FFFFFFF)
+
     def establish(self, edge: tuple) -> EdgeKey:
-        """Run BB84 for an edge (a, b); idempotent per epoch. Edge endpoints
-        may be ints (satellites) or strings (ground stations)."""
-        edge = tuple(sorted(edge, key=str))
+        """Run BB84 for an edge (a, b); idempotent per epoch. The per-edge
+        oracle for ``establish_edges`` — same fold-in, same circuit."""
+        edge = canonical_edge(edge)
         if edge in self._edges:
             return self._edges[edge]
-        sub = jax.random.fold_in(self.master_key, hash(edge) & 0x7FFFFFFF)
-        res = bb84_keygen(sub, self.n_qkd_bits,
+        res = bb84_keygen(self._edge_key(edge), self.n_qkd_bits,
                           eavesdrop=edge in self.eavesdrop_edges)
         seed = int(derive_pad_seed(res.sifted_key, res.key_len))
         qber = float(res.qber)
@@ -68,6 +102,34 @@ class KeyManager:
                      compromised=qber > QBER_ABORT)
         self._edges[edge] = ek
         return ek
+
+    def establish_edges(self, edges) -> list[EdgeKey]:
+        """Establish many edges in ONE vmapped BB84 dispatch.
+
+        Already-established edges are served from the registry; the rest
+        run as an edge-batched program (stacked qubit batches, batched
+        sifting/QBER, vectorized abort mask). Results are bit-identical
+        to per-edge ``establish`` calls — tests enforce it.
+        """
+        canon = [canonical_edge(e) for e in edges]
+        new, seen = [], set()
+        for e in canon:
+            if e not in self._edges and e not in seen:
+                seen.add(e)
+                new.append(e)
+        if new:
+            keys = jax.vmap(
+                lambda h: jax.random.fold_in(self.master_key, h))(
+                jnp.asarray([hash(e) & 0x7FFFFFFF for e in new], jnp.uint32))
+            eav = jnp.asarray([e in self.eavesdrop_edges for e in new], bool)
+            res = bb84_keygen_edges(keys, self.n_qkd_bits, eav)
+            seeds = np.asarray(derive_pad_seeds(res.sifted_key, res.key_len))
+            qbers = np.asarray(res.qber)
+            for e, seed, q in zip(new, seeds, qbers):
+                self._edges[e] = EdgeKey(edge=e, seed=int(seed),
+                                         qber=float(q),
+                                         compromised=float(q) > QBER_ABORT)
+        return [self._edges[e] for e in canon]
 
     def get(self, edge: tuple) -> EdgeKey:
         return self.establish(edge)
@@ -80,5 +142,5 @@ class KeyManager:
         return out
 
     def rekey(self, edge: tuple) -> EdgeKey:
-        self._edges.pop(tuple(sorted(edge)), None)
+        self._edges.pop(canonical_edge(edge), None)
         return self.establish(edge)

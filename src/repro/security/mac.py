@@ -90,3 +90,24 @@ def poly_mac_u32(msg_u32: jax.Array, r_key: jax.Array, s_key: jax.Array) -> jax.
 def mac_verify(msg_u32: jax.Array, tag: jax.Array, r_key, s_key) -> jax.Array:
     """Constant-time verify: returns bool scalar."""
     return poly_mac_u32(msg_u32, r_key, s_key) == tag
+
+
+# ---------------------------------------------------------------------------
+# edge-batched (stacked) entries
+# ---------------------------------------------------------------------------
+
+def poly_mac_rows(msgs_u32: jax.Array, r_keys: jax.Array,
+                  s_keys: jax.Array) -> jax.Array:
+    """Tag E equal-length streams in one dispatch.
+
+    msgs (E, n) uint32, r/s keys (E,) → tags (E,). Row e is the exact
+    ``poly_mac_u32(msgs[e], r_keys[e], s_keys[e])`` value — the arithmetic
+    is exact modular math, so batching cannot change a single tag bit.
+    """
+    return jax.vmap(poly_mac_u32)(msgs_u32, r_keys, s_keys)
+
+
+def mac_verify_rows(msgs_u32: jax.Array, tags: jax.Array, r_keys,
+                    s_keys) -> jax.Array:
+    """Vectorized verify: (E,) bool — one recompute for the whole stage."""
+    return poly_mac_rows(msgs_u32, r_keys, s_keys) == tags

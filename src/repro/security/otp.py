@@ -66,6 +66,36 @@ def encrypt_flat_u32(msg_u32: jax.Array, seed_u32) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# edge-batched (stacked) entries — leaves carry a leading edge/row axis
+# ---------------------------------------------------------------------------
+
+def pad_u32_rows(seeds_u32: jax.Array, n: int) -> jax.Array:
+    """(E,) seeds → (E, n) pad words; row e == ``pad_u32(seeds[e], n)``."""
+    return jax.vmap(lambda s: pad_u32(s, n))(seeds_u32)
+
+
+def encrypt_tree_rows(tree, seeds_u32: jax.Array):
+    """OTP-encrypt every row of a stacked pytree in one dispatch.
+
+    Leaves are (E, ...); seeds (E,) uint32 — one pad stream per edge. Row
+    e of the result is bit-identical to ``encrypt_tree(row_e, seeds[e])``
+    (same per-leaf fold-in, same threefry expansion), so the per-edge path
+    stays the numerics oracle. Involution: decrypt == encrypt.
+    """
+    base = jax.vmap(_seed_to_key)(jnp.asarray(seeds_u32, jnp.uint32))
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        keys = jax.vmap(lambda k: jax.random.fold_in(k, i))(base)
+        out.append(jax.vmap(_xor_leaf)(leaf, keys))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decrypt_tree_rows(tree, seeds_u32):
+    return encrypt_tree_rows(tree, seeds_u32)   # XOR is an involution
+
+
+# ---------------------------------------------------------------------------
 # pytree <-> flat u32 view (for MAC computation / wire format)
 # ---------------------------------------------------------------------------
 
@@ -83,6 +113,49 @@ def tree_to_u32(tree) -> jax.Array:
             u = half[:, 0] | (half[:, 1] << 16)
         words.append(u.astype(jnp.uint32))
     return jnp.concatenate(words) if words else jnp.zeros((0,), jnp.uint32)
+
+
+def tree_to_u32_rows(tree) -> jax.Array:
+    """Stacked wire view: leaves (E, ...) → (E, W) uint32; row e equals
+    ``tree_to_u32`` of row e (same packing, same odd-u16 zero pad)."""
+    words = []
+    E = None
+    for leaf in jax.tree_util.tree_leaves(tree):
+        E = leaf.shape[0]
+        udtype = _BITCAST[jnp.dtype(leaf.dtype)]
+        u = jax.lax.bitcast_convert_type(leaf, udtype).reshape(E, -1)
+        if udtype == jnp.uint16:
+            if u.shape[1] % 2:
+                u = jnp.concatenate(
+                    [u, jnp.zeros((E, 1), jnp.uint16)], axis=1)
+            half = u.reshape(E, -1, 2).astype(jnp.uint32)
+            u = half[:, :, 0] | (half[:, :, 1] << 16)
+        words.append(u.astype(jnp.uint32))
+    return (jnp.concatenate(words, axis=1) if words
+            else jnp.zeros((E or 0, 0), jnp.uint32))
+
+
+def u32_to_tree_rows(vec: jax.Array, like):
+    """Inverse of ``tree_to_u32_rows`` given a stacked structural template."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    E = vec.shape[0]
+    for leaf in leaves:
+        udtype = _BITCAST[jnp.dtype(leaf.dtype)]
+        n = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+        if udtype == jnp.uint16:
+            n_words = (n + 1) // 2
+            w = vec[:, off:off + n_words]
+            lo = (w & 0xFFFF).astype(jnp.uint16)
+            hi = (w >> 16).astype(jnp.uint16)
+            u = jnp.stack([lo, hi], axis=2).reshape(E, -1)[:, :n]
+            off += n_words
+        else:
+            u = vec[:, off:off + n].astype(jnp.uint32)
+            off += n
+        out.append(jax.lax.bitcast_convert_type(
+            u.reshape(leaf.shape), leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def u32_to_tree(vec: jax.Array, like):

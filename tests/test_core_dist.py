@@ -80,6 +80,25 @@ def test_otp_bitexact_transparent(fl_setup):
         assert bool(jnp.all(a == b))
 
 
+def test_otp_gather_verifies_mac_in_graph(fl_setup):
+    """The central-gather topology tags every satellite's ciphertext with
+    the batched MAC plane and verifies at the aggregator, in-graph; the
+    aggregate stays bit-identical to plain 'otp'."""
+    from jax.sharding import Mesh
+    cfg, api, opt, n, state, batches, mask, seeds = fl_setup
+    fl = SatQFLConfig(mode="sim", local_steps=2, batch_size=8)
+    rf = jax.jit(make_fl_round(cfg, api, fl, opt, n,
+                               security="otp_gather"))
+    with Mesh(np.array(jax.devices()), ("data",)):
+        s_g, m = rf(state, batches, mask, seeds)
+    assert bool(m["mac_ok"])
+    s_otp, m_otp = _round(fl_setup, "sim", "otp")
+    assert "mac_ok" not in m_otp
+    for a, b in zip(jax.tree_util.tree_leaves(s_g.params),
+                    jax.tree_util.tree_leaves(s_otp.params)):
+        assert bool(jnp.all(a == b))
+
+
 def test_secagg_close_to_plain(fl_setup):
     s_none, _ = _round(fl_setup, "sim", "none")
     s_sa, _ = _round(fl_setup, "sim", "secagg")
