@@ -3,8 +3,13 @@
 The acceptance benchmark of the batched round engine: one full sat-QFL
 round (local training + secure exchange accounting + aggregation) timed
 at n_sats ∈ {8, 16, 32} for all four scheduling modes, batched vs the
-per-client oracle loop. The headline is the simultaneous-mode speedup at
-32 satellites (acceptance: ≥ 3×).
+per-client oracle loop. Headlines: the simultaneous-mode speedup at 32
+satellites (acceptance: ≥ 3×) and, since the async-v2 ring engine, the
+asynchronous-mode speedup at 32 satellites (acceptance: ≥ 3× — the
+bounded-staleness buffer runs as one compiled merge dispatch instead of
+per-main list churn). An ``async_secagg`` scenario rides along: the same
+async round with dropout-tolerant secure aggregation (pairwise-masked
+quantized updates, one QBER-aborted satellite recovered per round).
 
 Timing excludes jit warm-up (the first ``warmup`` rounds are discarded)
 and evaluation (eval_every is pushed past the horizon); what remains is
@@ -18,12 +23,31 @@ import time
 import jax
 
 
+def _time_pair(cfg, api, fl, trace, sats, server, warmup, timed, **kw):
+    entry = {}
+    from repro.core import SatQFLTrainer
+    for batched in (False, True):
+        tr = SatQFLTrainer(cfg, api, fl, trace, sats, server,
+                           batched=batched, **kw)
+        for r in range(warmup):
+            tr.run_round(r)
+        jax.block_until_ready(tr.global_params)
+        t0 = time.perf_counter()
+        for r in range(warmup, warmup + timed):
+            tr.run_round(r)
+        jax.block_until_ready(tr.global_params)
+        us = (time.perf_counter() - t0) / timed * 1e6
+        entry["batched_us" if batched else "per_client_us"] = us
+    entry["speedup"] = entry["per_client_us"] / entry["batched_us"]
+    return entry
+
+
 def round_scaling(n_sats_list=(8, 16, 32),
                   modes=("sim", "seq", "async", "qfl"),
                   warmup: int = 2, timed: int = 3, local_steps: int = 5,
                   batch_size: int = 16, qubits: int = 4):
     from repro.constellation import build_trace
-    from repro.core import SatQFLConfig, SatQFLTrainer
+    from repro.core import SatQFLConfig
     from repro.data import dirichlet_partition, make_statlog, server_split
     from repro.models import get_config, get_model
 
@@ -43,21 +67,20 @@ def round_scaling(n_sats_list=(8, 16, 32),
             fl = SatQFLConfig(mode=mode, n_rounds=warmup + timed,
                               local_steps=local_steps,
                               batch_size=batch_size, eval_every=10 ** 6)
-            entry = {}
-            for batched in (False, True):
-                tr = SatQFLTrainer(cfg, api, fl, trace, sats, server,
-                                   batched=batched)
-                for r in range(warmup):
-                    tr.run_round(r)
-                jax.block_until_ready(tr.global_params)
-                t0 = time.perf_counter()
-                for r in range(warmup, warmup + timed):
-                    tr.run_round(r)
-                jax.block_until_ready(tr.global_params)
-                us = (time.perf_counter() - t0) / timed * 1e6
-                entry["batched_us" if batched else "per_client_us"] = us
-            entry["speedup"] = entry["per_client_us"] / entry["batched_us"]
-            out.setdefault(mode, {})[f"n{n}"] = entry
+            out.setdefault(mode, {})[f"n{n}"] = _time_pair(
+                cfg, api, fl, trace, sats, server, warmup, timed)
+        if "async" in modes and n == max(n_sats_list):
+            # dropout scenario: secagg-masked async aggregation with one
+            # eavesdropped (QBER-aborted) satellite recovered every round
+            fl = SatQFLConfig(mode="async", n_rounds=warmup + timed,
+                              local_steps=local_steps,
+                              batch_size=batch_size, eval_every=10 ** 6,
+                              agg_security="secagg", security="qkd",
+                              on_qber_abort="drop")
+            eav = frozenset((1, m) for m in range(n) if m != 1)
+            out.setdefault("async_secagg", {})[f"n{n}"] = _time_pair(
+                cfg, api, fl, trace, sats, server, warmup, timed,
+                eavesdrop_edges=eav)
     return out
 
 
@@ -65,4 +88,6 @@ def quick():
     payload = round_scaling()
     nmax = max(int(k[1:]) for k in payload["sim"])
     head = payload["sim"][f"n{nmax}"]["speedup"]
-    return payload, f"sim n{nmax} batched {head:.1f}x"
+    head_async = payload["async"][f"n{nmax}"]["speedup"]
+    return payload, (f"sim n{nmax} batched {head:.1f}x, "
+                     f"async {head_async:.1f}x")

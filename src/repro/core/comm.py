@@ -60,6 +60,10 @@ class CommLog:
     bytes_moved: int = 0
     n_transfers: int = 0
     per_round: list = field(default_factory=list)
+    # per-round component deltas (wall / wait / security / bytes /
+    # transfers), recorded by close_round — the async property suite
+    # compares execution paths on these EXACTLY, component by component
+    round_details: list = field(default_factory=list)
 
     def count_transfer(self, nbytes: int):
         self.bytes_moved += nbytes
@@ -76,6 +80,18 @@ class CommLog:
 
     def close_round(self):
         self.per_round.append(self.total_s)
+        prev = (self.round_details[-1]["cum"] if self.round_details
+                else (0.0, 0.0, 0.0, 0, 0))
+        cum = (self.transfer_s, self.wait_s, self.security_s,
+               self.bytes_moved, self.n_transfers)
+        self.round_details.append({
+            "transfer_s": cum[0] - prev[0],
+            "wait_s": cum[1] - prev[1],
+            "security_s": cum[2] - prev[2],
+            "bytes_moved": cum[3] - prev[3],
+            "n_transfers": cum[4] - prev[4],
+            "cum": cum,
+        })
 
     @property
     def total_s(self) -> float:

@@ -32,6 +32,11 @@ class SatQFLConfig:
     on_qber_abort: str = "raise"  # raise | drop — a compromised edge kills
     #   the round (legacy) or just drops its update (paper §III-B: the
     #   satellite leaves C(t) until re-keyed); aborts surface per edge
+    agg_security: str = "none"   # none | secagg — secagg adds Bonawitz-style
+    #   pairwise masking to the async staleness buffer: cohort members mask
+    #   their quantized updates with signed pad streams keyed off pairwise
+    #   BB84 shares, and a satellite that QBER-aborts or misses its window
+    #   has its pads cancelled exactly from the surviving rows (async only)
 
     # --- aggregation -------------------------------------------------------
     weight_by_samples: bool = True   # FedAvg weighting w_i
@@ -47,6 +52,14 @@ class SatQFLConfig:
             raise ValueError(
                 f"on_qber_abort must be 'raise' or 'drop', "
                 f"got {self.on_qber_abort!r}")
+        if self.agg_security not in ("none", "secagg"):
+            raise ValueError(
+                f"agg_security must be 'none' or 'secagg', "
+                f"got {self.agg_security!r}")
+        if self.agg_security == "secagg" and self.mode != "async":
+            raise ValueError(
+                "agg_security='secagg' is the async staleness-buffer "
+                "dropout scenario; set mode='async'")
 
     def replace(self, **kw) -> "SatQFLConfig":
         return dataclasses.replace(self, **kw)

@@ -32,8 +32,10 @@ from repro.constellation.topology import (
 )
 from repro.core.flconfig import SatQFLConfig
 from repro.security.keys import (
-    KeyManager, canonical_edge, mac_key_mix, round_seed_mix,
+    KeyManager, canonical_edge, mac_key_mix, pairwise_mask_seed,
+    round_seed_mix,
 )
+from repro.security.otp import SECAGG_CLIP as _SECAGG_CLIP, SECAGG_W_MAX
 
 GROUND = -1    # edge endpoint id for the ground station ("gs")
 
@@ -66,7 +68,11 @@ class EdgeSchedule:
     mask: np.ndarray          # (R, E_max) bool — valid edge
     first: np.ndarray         # (R, E_max) bool — first contact (QKD here)
     abort: np.ndarray         # (R, E_max) bool — QBER abort at establishment
-    seed: np.ndarray          # (R, E_max) uint32 — per-(round, edge) pad seed
+    born: np.ndarray          # (R, E_max) int — round the payload was trained
+                              #   (= r except async deferred deliveries; the
+                              #   pad-seed fold-in round, so one pad per
+                              #   in-flight update, never reused)
+    seed: np.ndarray          # (R, E_max) uint32 — per-(born, edge) pad seed
     mac_r: np.ndarray         # (R, E_max) uint32 — MAC evaluation point
     mac_s: np.ndarray         # (R, E_max) uint32 — MAC blind
     with_keys: bool           # key-material columns populated?
@@ -78,6 +84,68 @@ class EdgeSchedule:
         a = int(self.src[r, j])
         b = "gs" if int(self.dst[r, j]) == GROUND else int(self.dst[r, j])
         return canonical_edge((a, b))
+
+
+@dataclass(frozen=True)
+class StalenessSchedule:
+    """Compiled async bounded-staleness buffer (the v2 ring frame).
+
+    Async v2 semantics: a secondary trains every round it is grouped, but
+    its update only moves when the (sat, main) ISL window opens — an
+    update *born* at round ``b`` is delivered at the first mains-bearing
+    round whose trace time has passed the window opening, enters its
+    destination main's buffer, and merges at the first round that main is
+    primary again, provided its staleness ``r − b`` is still within
+    Δ_max; otherwise it is discarded. All of that is a pure function of
+    the trace, so the whole buffer lifecycle — delivery rounds, ring
+    slots, validity/born masks, normalized merge weights, delivered
+    counts — compiles into dense arrays and the engine's entire async
+    merge becomes one scatter-into-ring + masked-tensordot dispatch.
+
+    Ring frame: ``(N + 1, D)`` per round and main slot, D = Δ_max + 1.
+    The ring is indexed by (satellite, born mod D) rather than per-group
+    secondary slots — group membership reshuffles round to round, the
+    satellite axis does not (row N is the scratch row for masked
+    writes). A slot overwrite is always safe: the previous occupant is
+    ≥ D rounds old, i.e. already beyond Δ_max.
+
+    The secagg columns (populated for ``fl.agg_security='secagg'``)
+    carry the pairwise-masking schedule: per-sender signed mask seeds
+    (cohort = the born-round group), and per-merge signed correction
+    streams cancelling every cohort partner absent from that merge batch
+    (QBER-aborted, window-dropped, or still in flight).
+    """
+    D: int                        # ring depth Δ_max + 1
+    n_mains_max: int              # G — merge rows per round
+    tx_wait_s: np.ndarray         # (R, N) float — seconds a round-r sender
+                                  #   waits for its transmit window (inf =
+                                  #   never reopens; engines clamp to the
+                                  #   comm model's mean window wait)
+    delay_rounds: np.ndarray      # (R, N) int — rounds until the window
+                                  #   opens for a round-r sender; -1 never
+    deliver_round: np.ndarray     # (R, N) int — compiled delivery round of
+                                  #   a round-r update; -1 = dropped
+                                  #   (windowless / stale-on-arrival /
+                                  #   beyond horizon / no mains round)
+    send_slot: np.ndarray         # (R, N) int — ring slot (born mod D)
+                                  #   written by a round-r sender; -1 none
+    main_ids: np.ndarray          # (R, G) int — mains in engine iteration
+                                  #   order; -1 pad
+    merge_w: np.ndarray           # (R, G, N+1, D) float32 — normalized
+                                  #   FedAvg weight of each ring cell in
+                                  #   this round's merge (0 = not merged)
+    merge_born: np.ndarray        # (R, G, N+1, D) int — born round of each
+                                  #   merged cell; -1 invalid
+    merge_any: np.ndarray         # (R, G) bool — any entry merged
+    merge_count: np.ndarray       # (R, G) int32 — delivered-count per main
+    # --- secagg (dropout-tolerant secure aggregation) -------------------
+    with_secagg: bool
+    wq: np.ndarray                # (N,) int32 — integer FedAvg weights
+    pair_seed: np.ndarray         # (R, N, P) uint32 — sender mask seeds
+    pair_sign: np.ndarray         # (R, N, P) int32 — +1 / −1 / 0 pad
+    sum_wq: np.ndarray            # (R, G) int32 — Σ wq over merged entries
+    corr_seed: np.ndarray         # (R, G, C) uint32 — merge corrections
+    corr_sign: np.ndarray         # (R, G, C) int32
 
 
 @dataclass(frozen=True)
@@ -101,6 +169,7 @@ class RoundPlan:
                                   #   sat's uplink edge at round r
     weights: np.ndarray           # (N,) float32 — FedAvg aggregation weights w_i
     edges: EdgeSchedule | None = None   # per-round secure-exchange schedule
+    stale: StalenessSchedule | None = None  # async bounded-staleness buffer
 
     # ------------------------------------------------------------------
     # per-round views
@@ -197,41 +266,49 @@ def _groups_of(assignment_r: np.ndarray, prim_r: np.ndarray):
     return out
 
 
-def _round_stages(fl: SatQFLConfig, assignment_r, prim_r, waits_r, n_sats):
+def _round_stages(fl: SatQFLConfig, assignment_r, prim_r, waits_r, n_sats,
+                  arrivals_r=None):
     """Edge list of each dispatch stage of one round, in execution order.
 
-    Each edge is (src, dst, link, conc) with dst = GROUND for the feeder.
-    Mirrors exactly how the engines walk a round: qfl = one feeder stage;
-    sim/async = ISL uplinks (async drops windowless secondaries before the
-    exchange) then feeder; seq = one stage per chain hop, then feeder.
+    Each edge is (src, dst, link, conc, born) with dst = GROUND for the
+    feeder and ``born`` the round the payload was trained (= this round
+    except async deferred deliveries). Mirrors exactly how the engines
+    walk a round: qfl = one feeder stage; sim = ISL uplinks then feeder;
+    async = the staleness schedule's compiled ARRIVALS (updates whose
+    window has opened by this round, possibly born rounds earlier) then
+    feeder; seq = one stage per chain hop, then feeder.
     """
+    def now(edges):
+        return [(a, b, lk, c, -1) for (a, b, lk, c) in edges]
+
     if fl.mode == "qfl":
-        return [[(s, GROUND, 1, 1) for s in range(n_sats)]]
+        return [now([(s, GROUND, 1, 1) for s in range(n_sats)])]
     groups = _groups_of(assignment_r, prim_r)
     mains = list(groups)
     stages = []
     if fl.mode == "sim":
-        stages.append([(s, m, 0, max(len(groups[m]), 1))
-                       for m in mains for s in groups[m]])
+        stages.append(now([(s, m, 0, max(len(groups[m]), 1))
+                           for m in mains for s in groups[m]]))
     elif fl.mode == "async":
-        stages.append([(s, m, 0, 1) for m in mains for s in groups[m]
-                       if np.isfinite(waits_r[s])])
+        stages.append([(s, m, 0, 1, b) for (s, m, b) in (arrivals_r or [])])
     elif fl.mode == "seq":
         chains = [groups[m] for m in mains]
         for hop in range(max((len(c) for c in chains), default=0)):
-            stages.append([(c[hop], mains[g], 0, 1)
-                           for g, c in enumerate(chains) if len(c) > hop])
+            stages.append(now([(c[hop], mains[g], 0, 1)
+                               for g, c in enumerate(chains) if len(c) > hop]))
     else:
         raise ValueError(fl.mode)
-    stages.append([(m, GROUND, 1, 1) for m in mains])
+    stages.append(now([(m, GROUND, 1, 1) for m in mains]))
     return stages
 
 
 def _edge_schedule(fl: SatQFLConfig, assignment, prim, waits,
-                   keymgr: KeyManager | None) -> EdgeSchedule:
+                   keymgr: KeyManager | None,
+                   arrivals=None) -> EdgeSchedule:
     """Compile the per-round secure-exchange plane (see EdgeSchedule)."""
     R, N = assignment.shape
-    per_round = [_round_stages(fl, assignment[r], prim[r], waits[r], N)
+    per_round = [_round_stages(fl, assignment[r], prim[r], waits[r], N,
+                               arrivals[r] if arrivals is not None else None)
                  for r in range(R)]
     S_max = max(len(st) for st in per_round)
     E_max = max(max((sum(len(s) for s in st) for st in per_round)), 1)
@@ -245,6 +322,7 @@ def _edge_schedule(fl: SatQFLConfig, assignment, prim, waits,
     mask = np.zeros((R, E_max), bool)
     first = np.zeros((R, E_max), bool)
     abort = np.zeros((R, E_max), bool)
+    born = np.zeros((R, E_max), np.int64)
     seed = np.zeros((R, E_max), np.uint32)
     mac_r = np.zeros((R, E_max), np.uint32)
     mac_s = np.zeros((R, E_max), np.uint32)
@@ -254,10 +332,11 @@ def _edge_schedule(fl: SatQFLConfig, assignment, prim, waits,
     for r, stages in enumerate(per_round):
         j = 0
         for si, stage in enumerate(stages):
-            for (a, b, lk, c) in stage:
+            for (a, b, lk, c, bn) in stage:
                 e = canonical_edge((a, "gs" if b == GROUND else b))
                 src[r, j], dst[r, j] = a, b
                 link[r, j], conc[r, j], mask[r, j] = lk, c, True
+                born[r, j] = r if bn < 0 else bn
                 cells[r, j] = e
                 if e not in seen:
                     seen.add(e)
@@ -276,14 +355,210 @@ def _edge_schedule(fl: SatQFLConfig, assignment, prim, waits,
             for j in range(int(ptr[r, -1])):
                 ek = info[cells[r, j]]
                 abort[r, j] = ek.compromised
-                rs = round_seed_mix(ek.seed, r)
+                # pad seeds fold in the BORN round (one in-flight update
+                # per (edge, born), so pads never reuse even when several
+                # deferred deliveries cross the same edge in one round)
+                rs = round_seed_mix(ek.seed, born[r, j])
                 seed[r, j] = rs
                 mac_r[r, j], mac_s[r, j] = mac_key_mix(rs)
 
     return EdgeSchedule(n_stages=n_stages, ptr=ptr, src=src, dst=dst,
                         link=link, conc=conc, mask=mask, first=first,
-                        abort=abort, seed=seed, mac_r=mac_r, mac_s=mac_s,
-                        with_keys=keymgr is not None)
+                        abort=abort, born=born, seed=seed, mac_r=mac_r,
+                        mac_s=mac_s, with_keys=keymgr is not None)
+
+
+def _async_send_schedule(fl: SatQFLConfig, assignment, prim,
+                         trace: ConstellationTrace, t_idx):
+    """Phase A of the staleness compiler: pure-topology send/arrival plan.
+
+    A secondary trains DURING its round's access window, so the finished
+    update can only move at the next trace step its (sat, main) ISL is
+    open — that transmission instant is ``tx_wait_s`` after the round
+    step, and the update is delivered at the first mains-bearing round at
+    or past it. It is dropped when the window never reopens inside the
+    trace, the delivery would land beyond the horizon, or it would
+    already exceed Δ_max on arrival (too stale to bother transmitting) —
+    so asynchronous updates always merge with staleness ≥ 1, the classic
+    async-FL regime the bounded buffer exists for.
+
+    Returns (delay_rounds, deliver_round, tx_wait_s, arrivals,
+    groups_per_round); ``arrivals[r]`` lists (sat, dest main, born) in
+    canonical delivery order — born ascending, then the born round's
+    group iteration order — which is exactly the order the per-main-list
+    oracle's outbox drains.
+    """
+    R, N = assignment.shape
+    t_idx = np.asarray(t_idx, np.int64)
+    step = (float(trace.times_s[1] - trace.times_s[0])
+            if trace.n_steps > 1 else 0.0)
+    groups_r = [_groups_of(assignment[r], prim[r]) for r in range(R)]
+    has_mains = [len(g) > 0 for g in groups_r]
+    delay = np.full((R, N), -1, np.int64)
+    deliver = np.full((R, N), -1, np.int64)
+    tx_wait = np.full((R, N), np.inf)
+    for b in range(R):
+        t = int(t_idx[b])
+        for m, secs in groups_r[b].items():
+            for s in secs:
+                hits = np.where(trace.ss_access[s, m, t + 1:])[0]
+                if len(hits) == 0:
+                    continue                # window never reopens: dropped
+                k_tx = t + 1 + int(hits[0])
+                tx_wait[b, s] = (k_tx - t) * step
+                ks = np.where(t_idx[b:] >= k_tx)[0]
+                if len(ks) == 0:
+                    continue                # opens past the round horizon
+                delay[b, s] = int(ks[0])
+                rd = next((k for k in range(b + int(ks[0]), R)
+                           if has_mains[k]), None)
+                if rd is None or rd - b > fl.max_staleness:
+                    continue
+                deliver[b, s] = rd
+    arrivals = [[] for _ in range(R)]
+    for b in range(R):
+        for m, secs in groups_r[b].items():
+            for s in secs:
+                if deliver[b, s] >= 0:
+                    arrivals[int(deliver[b, s])].append((int(s), int(m), b))
+    return delay, deliver, tx_wait, arrivals, groups_r
+
+
+def _staleness_schedule(fl: SatQFLConfig, delay, deliver, tx_wait, arrivals,
+                        groups_r, weights, es: EdgeSchedule,
+                        keymgr: KeyManager | None) -> StalenessSchedule:
+    """Phase B: simulate the buffer lifecycle into dense merge arrays.
+
+    Runs the same pending-queue mechanics the per-main-list oracle runs
+    live — arrivals append (minus QBER-aborted edges when key material
+    exists and the policy is to drop them), each current main merges its
+    fresh entries and discards stale ones — and records the outcome as
+    ring-frame masks. The secagg pass additionally deals pairwise mask
+    shares per born-round cohort and compiles the per-merge signed
+    correction streams for absent partners.
+    """
+    R, N = delay.shape
+    D = fl.max_staleness + 1
+    G = max(max((len(g) for g in groups_r), default=1), 1)
+    secagg = fl.agg_security == "secagg" and keymgr is not None
+
+    # engine aborts on compromised edges for every security mode but none
+    aborted = {}
+    if es.with_keys and fl.security != "none" and keymgr is not None:
+        for r in range(R):
+            for (s, m, b) in arrivals[r]:
+                e = canonical_edge((s, m))
+                if e not in aborted:
+                    aborted[e] = keymgr.get(e).compromised
+
+    main_ids = np.full((R, G), -1, np.int64)
+    send_slot = np.full((R, N), -1, np.int64)
+    merge_w = np.zeros((R, G, N + 1, D), np.float32)
+    merge_born = np.full((R, G, N + 1, D), -1, np.int64)
+    merge_any = np.zeros((R, G), bool)
+    merge_count = np.zeros((R, G), np.int32)
+
+    wq = np.maximum(1, np.round(
+        np.asarray(weights, np.float64) * SECAGG_W_MAX
+        / max(float(np.max(weights)), 1e-9))).astype(np.int32)
+    P = max(max((len(secs) for g in groups_r for secs in g.values()),
+                default=1) - 1, 1)
+    pair_seed = np.zeros((R, N, P), np.uint32)
+    pair_sign = np.zeros((R, N, P), np.int32)
+    sum_wq = np.zeros((R, G), np.int32)
+
+    pair_base = {}
+    if secagg:
+        pairs = sorted({canonical_edge((s, s2))
+                        for g in groups_r for secs in g.values()
+                        for s in secs for s2 in secs if s != s2},
+                       key=str)
+        pair_base = keymgr.share_edges(pairs)
+        for b in range(R):
+            for m, secs in groups_r[b].items():
+                for s in secs:
+                    for k, s2 in enumerate(x for x in secs if x != s):
+                        e = canonical_edge((s, s2))
+                        pair_seed[b, s, k] = pairwise_mask_seed(
+                            pair_base[e], b)
+                        pair_sign[b, s, k] = 1 if s < s2 else -1
+
+    # --- the buffer simulation (mirrors the oracle's live lists) --------
+    pending: dict[int, list] = {}
+    batches: dict[tuple, list] = {}   # (r, g) -> merged [(s, born)]
+    for b in range(R):
+        for m, secs in groups_r[b].items():
+            for s in secs:
+                if deliver[b, s] >= 0:
+                    send_slot[b, s] = b % D
+    for r in range(R):
+        mains = list(groups_r[r])
+        main_ids[r, :len(mains)] = mains
+        for (s, m, b) in arrivals[r]:
+            if aborted.get(canonical_edge((s, m)), False):
+                continue                    # QBER abort: update dropped
+            pending.setdefault(m, []).append((s, b))
+        for g, m in enumerate(mains):
+            q = pending.get(m, [])
+            fresh = sorted([(s, b) for (s, b) in q
+                            if r - b <= fl.max_staleness])
+            pending[m] = []                 # merged or stale-discarded
+            batches[(r, g)] = fresh
+            if not fresh:
+                continue
+            ws = [float(weights[s]) for s, _ in fresh]
+            wsum = sum(ws)
+            for (s, b), w in zip(fresh, ws):
+                merge_w[r, g, s, b % D] = np.float32(w / wsum)
+                merge_born[r, g, s, b % D] = b
+            merge_any[r, g] = True
+            merge_count[r, g] = len(fresh)
+            sum_wq[r, g] = int(sum(int(wq[s]) for s, _ in fresh))
+            if secagg and sum_wq[r, g] * _SECAGG_CLIP >= 2 ** 31:
+                # the documented overflow budget (otp.py): |Σ w·q| must
+                # stay below 2^31 or the aggregate bitcast wraps into
+                # garbage — and both execution paths would wrap
+                # IDENTICALLY, so no parity test could catch it
+                raise ValueError(
+                    f"secagg merge batch at round {r} (Σw={sum_wq[r, g]}) "
+                    f"overflows the int32 fixed-point budget; reduce the "
+                    f"constellation/buffer size or Δ_max")
+
+    # --- secagg merge corrections: absent cohort partners ---------------
+    corr: dict[tuple, list] = {}
+    C = 1
+    if secagg:
+        for (r, g), fresh in batches.items():
+            if not fresh:
+                continue
+            inset = set(fresh)
+            lst = []
+            for (s, b) in fresh:
+                m = int(main_ids[r, g])
+                for s2 in groups_r[b][m]:
+                    if s2 == s or (s2, b) in inset:
+                        continue            # partner merges here: cancels
+                    e = canonical_edge((s, s2))
+                    lst.append((np.uint32(pairwise_mask_seed(pair_base[e],
+                                                             b)),
+                                -(1 if s < s2 else -1)))
+            if lst:
+                corr[(r, g)] = lst
+                C = max(C, len(lst))
+    corr_seed = np.zeros((R, G, C), np.uint32)
+    corr_sign = np.zeros((R, G, C), np.int32)
+    for (r, g), lst in corr.items():
+        for k, (sd, sg) in enumerate(lst):
+            corr_seed[r, g, k] = sd
+            corr_sign[r, g, k] = sg
+
+    return StalenessSchedule(
+        D=D, n_mains_max=G, tx_wait_s=tx_wait,
+        delay_rounds=delay, deliver_round=deliver,
+        send_slot=send_slot, main_ids=main_ids, merge_w=merge_w,
+        merge_born=merge_born, merge_any=merge_any, merge_count=merge_count,
+        with_secagg=secagg, wq=wq, pair_seed=pair_seed, pair_sign=pair_sign,
+        sum_wq=sum_wq, corr_seed=corr_seed, corr_sign=corr_sign)
 
 
 def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
@@ -324,22 +599,34 @@ def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
 
     waits = _window_waits(trace, t_idx, assignment, prim)
 
-    if keymgr is None and with_seeds:
+    # secagg needs a key registry for the pairwise mask shares even when
+    # the transport itself runs security="none"
+    if keymgr is None and (with_seeds or fl.agg_security == "secagg"):
         keymgr = KeyManager(jax.random.PRNGKey(fl.seed + 7),
                             n_qkd_bits=fl.qkd_bits)
     if with_seeds:
         seeds = _seed_schedule(trace, t_idx, assignment, prim, fl, keymgr)
     else:
         seeds = np.zeros((R, N), np.uint32)
-    # the secure-exchange plane: key material rides along whenever a key
-    # registry exists (callers running security="none" pass neither)
-    edges = _edge_schedule(fl, assignment, prim, waits, keymgr)
 
     if fl.weight_by_samples and sample_counts is not None:
         weights = np.asarray(sample_counts, np.float32)
         assert weights.shape == (N,), "one sample count per satellite"
     else:
         weights = np.ones((N,), np.float32)
+
+    # async v2: compile the bounded-staleness send/arrival plan first —
+    # the edge schedule's async uplink stage IS the arrival schedule
+    arrivals = stale = None
+    if fl.mode == "async":
+        delay, deliver, tx_wait, arrivals, groups_r = _async_send_schedule(
+            fl, assignment, prim, trace, t_idx)
+    # the secure-exchange plane: key material rides along whenever a key
+    # registry exists (callers running security="none" pass neither)
+    edges = _edge_schedule(fl, assignment, prim, waits, keymgr, arrivals)
+    if fl.mode == "async":
+        stale = _staleness_schedule(fl, delay, deliver, tx_wait, arrivals,
+                                    groups_r, weights, edges, keymgr)
 
     return RoundPlan(
         n_rounds=R, n_sats=N,
@@ -355,4 +642,5 @@ def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
         seeds=seeds,
         weights=weights,
         edges=edges,
+        stale=stale,
     )

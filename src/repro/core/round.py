@@ -26,6 +26,32 @@ agree to float-accumulation tolerance (tests enforce ≤ 1e-6 on metrics,
 exact equality on comm accounting). A custom ``sample_batch`` (whose
 signature has no padding bound) forces the per-client path.
 
+**Async v2: the compiled bounded-staleness buffer.** The asynchronous
+schedule no longer blocks on access windows: an update trained at round
+``b`` transmits when its (sat, main) ISL window actually opens, arrives
+at a later round, and waits in its main's buffer until that main is
+primary again — merged if its staleness is still within Δ_max, discarded
+otherwise. The whole lifecycle is a pure function of the trace, so
+``core/plan.py`` compiles it into a :class:`~repro.core.plan.
+StalenessSchedule` (a fixed ``(n_mains, N+1, Δ_max+1)`` ring frame of
+validity/born/weight masks) and the batched executor runs queue append,
+staleness filter, weighted aggregation, and delivery counting as ONE
+scatter-into-ring + masked-tensordot dispatch per round — no per-main
+Python lists, no per-row tree slicing. The ``batched=False`` path keeps
+live per-main lists (append / filter / discard at runtime) and merges
+through the *same* frame-shaped reduction, so the two paths agree
+bit-for-bit on merged parameters and exactly on accounting.
+
+**Dropout-tolerant secure aggregation** (``fl.agg_security='secagg'``,
+async only): cohort members additively mask their quantized updates with
+signed pairwise pad streams keyed off BB84 shares
+(``security.otp.secagg_mask_stream``); masks of partners merged in the
+same batch cancel by construction, and a partner that QBER-aborts or
+misses its window has its pads cancelled EXACTLY from the surviving rows
+(``KeyManager.recover_masks`` / the plan's compiled correction tables) —
+mod-2^32 arithmetic, so the list oracle and the ring dispatch are
+bit-identical.
+
 **Edge-batched secure exchange (default).** With ``security`` in
 {``qkd``, ``qkd_fernet``} the per-edge Algorithm-2 loop — BB84
 establishment, pad expansion, OTP-XOR, MAC — used to dispatch once per
@@ -59,12 +85,14 @@ from repro.core.plan import RoundPlan, compile_round_plan
 from repro.nn.optim import get_optimizer, inv_sqrt_schedule, constant_schedule
 from repro.nn.pytree import tree_bytes, tree_weighted_sum
 from repro.security.errors import SecurityError
+from repro.security.fernet_lite import TOKEN_OVERHEAD
 from repro.security.keys import KeyManager, canonical_edge
 from repro.security.mac import (mac_verify, mac_verify_rows, poly_mac_rows,
                                 poly_mac_u32)
 from repro.security.otp import (decrypt_tree, decrypt_tree_rows, encrypt_tree,
-                                encrypt_tree_rows, tree_to_u32,
-                                tree_to_u32_rows)
+                                encrypt_tree_rows, q32_to_tree,
+                                secagg_mask_stream, sum_signed_pads,
+                                tree_to_u32, tree_to_u32_rows)
 from repro.quantum.teleport import teleport_params
 
 
@@ -184,7 +212,15 @@ class SatQFLTrainer:
                                  eavesdrop_edges=eavesdrop_edges)
         self._qkd_established: set = set()
         self.aborted_edges: set = set()         # QBER aborts, per edge
-        self.pending: dict[int, list] = {}      # async: main -> [(params, w, born)]
+        # async oracle state: live per-main buffer lists and the deferred
+        # in-flight sends, keyed by their compiled delivery round
+        self.pending: dict[int, list] = {}      # main -> [(payload, sat, born)]
+        self._outbox: dict[int, list] = {}      # deliver_round -> sends
+        # test hook: when True, every (round, main) buffer-merge output is
+        # recorded as a host tree — the async property suite compares the
+        # ring path against the list oracle at this boundary, bit by bit
+        self.async_debug = False
+        self.async_merge_log: list = []
         self.log = CommLog()
         self.history: list[RoundMetrics] = []
         # the edge-batched secure plane covers the OTP(+MAC) modes; the
@@ -209,9 +245,51 @@ class SatQFLTrainer:
         self.plan: RoundPlan = compile_round_plan(
             trace, fl,
             sample_counts=counts,
-            keymgr=(self.keymgr if fl.security in ("qkd", "qkd_fernet")
-                    else None),
+            keymgr=(self.keymgr
+                    if (fl.security != "none"
+                        or fl.agg_security == "secagg") else None),
             with_seeds=False)
+
+        if fl.mode == "async":
+            self._init_async()
+
+    def _init_async(self):
+        """Async v2 state: the device-side staleness ring and its jits.
+
+        The ring is keyed (satellite, born mod D) — row ``n_sats`` is the
+        scratch row absorbing masked scatter writes — so group reshuffles
+        never need payload remapping; the compiled
+        :class:`~repro.core.plan.StalenessSchedule` masks select directly
+        into it.
+        """
+        fl, st = self.fl, self.plan.stale
+        N, D = self.n_sats, st.D
+        es = self.plan.edges
+        arr_max = max((int(es.ptr[r, 1] - es.ptr[r, 0])
+                       for r in range(self.plan.n_rounds)), default=1)
+        self._async_exframe = _next_pow2(max(arr_max, 1))
+        self._jit_ring_send = jax.jit(self._ring_send_impl)
+        self._jit_async_merge = jax.jit(self._async_merge_impl)
+        self._jit_amerge_frame = jax.jit(self._amerge_frame_impl)
+        self._ring = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((N + 1, D) + x.shape, x.dtype),
+            self.global_params)
+        if fl.agg_security == "secagg":
+            leaves = jax.tree_util.tree_leaves(self.global_params)
+            # user-config validation must RAISE (asserts vanish under -O)
+            if not all(jnp.dtype(x.dtype) == jnp.float32 for x in leaves):
+                raise ValueError(
+                    "agg_security='secagg' quantizes float32 parameters "
+                    "only; this model has non-f32 leaves")
+            self._q_words = sum(int(np.prod(x.shape)) for x in leaves)
+            if 4 * self._q_words != self._row_nbytes:
+                raise ValueError(
+                    "secagg wire stream size disagrees with the model's "
+                    "byte accounting")
+            self._ring_y = jnp.zeros((N + 1, D, self._q_words), jnp.uint32)
+            self._jit_ring_send_y = jax.jit(self._ring_send_y_impl)
+            self._jit_async_merge_y = jax.jit(self._async_merge_y_impl)
+            self._jit_mask_one = jax.jit(secagg_mask_stream)
 
     # ------------------------------------------------------------------
     # local training
@@ -425,12 +503,13 @@ class SatQFLTrainer:
         return decrypt_tree_rows(ct, seeds), ok
 
     def _exchange_rows_batched(self, stacked, rows, edges, r: int,
-                               stage: int, link: str, conc):
+                               stage: int, link: str, conc, borns=None):
         """Edge-batched Algorithm 2 for one round stage.
 
         Key material, first-contact and abort masks come from the
         compiled EdgeSchedule; the device work for ALL edges is one
-        stacked dispatch. The scalar accounting walks edges in the exact
+        stacked dispatch, and the stage's Fernet control tokens are one
+        batched call. The scalar accounting walks edges in the exact
         per-edge-oracle order, so comm/security totals are equal to the
         float, not just close.
         """
@@ -440,15 +519,17 @@ class SatQFLTrainer:
         assert hi - lo == len(edges), (r, stage, hi - lo, len(edges))
         nbytes = self._row_nbytes
         tq = self.comm.qkd_time(fl.qkd_bits)
-        walls, delivered = [], []
+        walls, delivered, fern = [], [], []
         for j, edge in enumerate(edges):
             e = es.edge_tuple(r, lo + j)
-            # link/concurrency come from the compiled schedule; the
+            # link/concurrency/born come from the compiled schedule; the
             # cross-checks catch any drift between plan and engine
             c = int(es.conc[r, lo + j])
+            bn = int(es.born[r, lo + j])
             assert e == canonical_edge(edge), (e, edge)
             assert c == conc[j] and link == ("feeder" if es.link[r, lo + j]
                                              else "isl"), (e, link, conc[j])
+            assert bn == (borns[j] if borns is not None else r), (e, bn)
             t = 0.0
             if es.first[r, lo + j]:
                 self._qkd_established.add(e)
@@ -466,21 +547,33 @@ class SatQFLTrainer:
             self.log.count_transfer(nbytes)
             tc = 2 * self.comm.crypto_time(nbytes)
             if fl.security == "qkd_fernet":
-                # control-plane token stays per edge: host-side hashlib
-                # bytes work, not device dispatch
-                from repro.security.fernet_lite import (fernet_decrypt,
-                                                        fernet_encrypt)
-                fkey = int(es.seed[r, lo + j]).to_bytes(4, "big") * 8
-                meta = f"edge={e} round={r} n={nbytes}".encode()
-                tok = fernet_encrypt(fkey, meta)
-                if fernet_decrypt(fkey, tok) != meta:
-                    raise SecurityError(
-                        f"Fernet token corrupt on edge {e}", edges=[e])
-                tc += 2 * self.comm.crypto_time(len(tok))
+                # control-plane metadata: the accounting stays in-loop
+                # (token length is structural), the hashlib byte work is
+                # deferred to ONE batched token call for the whole stage
+                meta = f"edge={e} round={bn} n={nbytes}".encode()
+                fern.append((e, int(es.seed[r, lo + j]), meta))
+                tc += 2 * self.comm.crypto_time(TOKEN_OVERHEAD + len(meta))
             self.log.add_security(tc)
             t += tc
             walls.append(t)
             delivered.append(True)
+
+        if fern:
+            from repro.security.fernet_lite import (InvalidToken,
+                                                    fernet_decrypt_rows,
+                                                    fernet_encrypt_rows)
+            fkeys = [seed.to_bytes(4, "big") * 8 for _, seed, _ in fern]
+            toks = fernet_encrypt_rows(fkeys, [m for _, _, m in fern])
+            try:
+                back = fernet_decrypt_rows(fkeys, toks)
+            except InvalidToken as err:
+                raise SecurityError(
+                    f"Fernet token corrupt in stage {(r, stage)}: {err}",
+                    edges=[e for e, _, _ in fern]) from err
+            bad = [e for (e, _, m), p in zip(fern, back) if p != m]
+            if bad:
+                raise SecurityError(f"Fernet token corrupt on edges {bad}",
+                                    edges=bad)
 
         # device plane: one dispatch for the whole stage, row-aligned on
         # the fixed frame (non-edge / aborted rows get seed 0 → identity)
@@ -506,13 +599,16 @@ class SatQFLTrainer:
         return out, walls, delivered
 
     def _exchange_rows(self, stacked, rows: list[int], edges: list[tuple],
-                       r: int, stage: int, link: str, concurrents=None):
+                       r: int, stage: int, link: str, concurrents=None,
+                       borns=None):
         """Algorithm-2 exchange over rows of a stacked (K, ...) tree.
 
         ``rows[j]`` is the stacked-tree row carrying ``edges[j]``'s
-        payload. Returns (stacked, walls, delivered) — delivered[j] False
-        for QBER-dropped edges (their rows pass through untouched and the
-        caller masks them out of aggregation).
+        payload; ``borns[j]`` (default: this round) is the round the
+        payload was trained — async deferred deliveries key their pad
+        seeds off it. Returns (stacked, walls, delivered) — delivered[j]
+        False for QBER-dropped edges (their rows pass through untouched
+        and the caller masks them out of aggregation).
 
         security='none' never touches the tensors — accounting only (the
         stacked aggregate stays on device, zero host round-trips). The
@@ -533,11 +629,13 @@ class SatQFLTrainer:
             return stacked, walls, [True] * k
         if self.edge_batched:
             return self._exchange_rows_batched(stacked, rows, edges, r,
-                                               stage, link, conc)
+                                               stage, link, conc, borns)
         out_rows, delivered = [], []
         for j, (edge, c) in enumerate(zip(edges, conc)):
             p_j = jax.tree_util.tree_map(lambda x: x[rows[j]], stacked)
-            p_j, t = self._exchange(p_j, edge, r, link, c)
+            p_j, t = self._exchange(p_j, edge,
+                                    borns[j] if borns is not None else r,
+                                    link, c)
             delivered.append(p_j is not None)
             out_rows.append(p_j)
             walls.append(t)
@@ -608,31 +706,112 @@ class SatQFLTrainer:
                   else self.global_params)
         return merged, max(up_walls), 0.0, len(collected)
 
-    def _merge_async(self, r: int, main: int, secs: list):
-        q = self.pending.setdefault(main, [])
-        up_walls, waits = [0.0], [0.0]
-        for s in secs:
-            p, _ = self._train_sat(s, self.global_params, r)
-            wait = float(self.plan.window_wait_s[r, s])
-            if not np.isfinite(wait):
-                continue                    # no window in trace: update dropped
-            waits.append(min(wait, self.comm.window_wait_s))
-            p, t = self._exchange(p, (s, main), r, "isl")
-            up_walls.append(t)
-            if p is None:
+    def _secagg_merge_oracle(self, m: int, fresh: list):
+        """Unmask + dequantize one main's secagg merge batch.
+
+        ``fresh``: [(y_stream, sat, born)] in canonical (sat, born) order.
+        Masks of partners inside the batch cancel by construction; every
+        absent cohort partner's signed pads are recovered from the key
+        registry and cancelled EXACTLY (mod-2^32 arithmetic).
+        """
+        st = self.plan.stale
+        agg = jnp.sum(jnp.stack([y["y"] for y, _, _ in fresh]), axis=0,
+                      dtype=jnp.uint32)
+        inset = {(s, b) for _, s, b in fresh}
+        pairs, borns, signs = [], [], []
+        for _, s, b in fresh:
+            for s2 in self.plan.groups(b)[m]:
+                if s2 == s or (s2, b) in inset:
+                    continue            # partner merges here: masks cancel
+                pairs.append(canonical_edge((s, s2)))
+                borns.append(b)
+                signs.append(-(1 if s < s2 else -1))
+        agg = agg + self.keymgr.recover_masks(pairs, borns, signs,
+                                              self._q_words)
+        sumw = sum(int(st.wq[s]) for _, s, _ in fresh)
+        return q32_to_tree(agg, self.global_params, jnp.float32(sumw))
+
+    def _async_oracle_prepare(self, r: int):
+        """Async v2, per-main-list oracle: one round's buffer mechanics.
+
+        Phase 1 trains every grouped secondary and schedules its send at
+        the compiled delivery round (``plan.stale.deliver_round``); phase
+        2 drains this round's arrivals — per-edge Algorithm 2, pad seeds
+        keyed by BORN round — into the live per-main lists; phase 3 lets
+        each current main merge its fresh entries (staleness filter, then
+        the same frame-shaped weighted reduction the ring dispatch runs,
+        so merged parameters match it bit-for-bit) and discard the rest.
+        Window waits are recorded per trained secondary as
+        min(wait, comm.window_wait_s) — a windowless satellite clamps to
+        the cap instead of silently reporting zero.
+        """
+        fl, st, cap = self.fl, self.plan.stale, self.comm.window_wait_s
+        groups = self.plan.groups(r)
+        mains = list(groups)
+        state = {"merged": {}, "walls": {}, "waits": {}, "delivered": {}}
+        secagg = fl.agg_security == "secagg"
+        for m, secs in groups.items():
+            gw = 0.0
+            for s in secs:
+                p, _ = self._train_sat(s, self.global_params, r)
+                # every sender's transmit wait counts — a window that
+                # never reopens clamps to the comm model's mean window
+                # wait instead of silently reporting zero
+                gw = max(gw, min(float(st.tx_wait_s[r, s]), cap))
+                rd = int(st.deliver_round[r, s])
+                if rd < 0:
+                    continue    # windowless / stale-on-arrival / horizon
+                if secagg:
+                    p = {"y": self._jit_mask_one(
+                        p, jnp.int32(int(st.wq[s])),
+                        jnp.asarray(st.pair_seed[r, s]),
+                        jnp.asarray(st.pair_sign[r, s]))}
+                self._outbox.setdefault(rd, []).append((s, m, r, p))
+            state["waits"][m] = gw
+        for (s, m, b, payload) in self._outbox.pop(r, []):
+            p2, t = self._exchange(payload, (s, m), b, "isl")
+            # an arrival whose destination lost primary status still costs
+            # its transfer; fold it into the round wall via the first group
+            key = m if m in groups else mains[0]
+            state["walls"][key] = max(state["walls"].get(key, 0.0), t)
+            if p2 is None:
                 continue                    # QBER abort: update dropped
-            q.append((p, self._weight_of(s), r))
-        # aggregate deliveries within Δ_max (bounded staleness)
-        fresh = [(p, w, born) for (p, w, born) in q
-                 if r - born <= self.fl.max_staleness]
-        self.pending[main] = []
-        if fresh:
-            merged = self._aggregate([p for p, _, _ in fresh],
-                                     [w for _, w, _ in fresh])
-            delivered = len(fresh)
-        else:
-            merged, delivered = self.global_params, 0
-        return merged, max(up_walls), max(waits), delivered
+            self.pending.setdefault(m, []).append((p2, s, b))
+        nd = (self.n_sats + 1) * st.D
+        for m in mains:
+            q = self.pending.get(m, [])
+            fresh = sorted([e for e in q
+                            if r - e[2] <= fl.max_staleness],
+                           key=lambda e: (e[1], e[2]))
+            self.pending[m] = []            # merged or stale-discarded
+            state["delivered"][m] = len(fresh)
+            if not fresh:
+                state["merged"][m] = self.global_params
+            elif secagg:
+                state["merged"][m] = self._secagg_merge_oracle(m, fresh)
+            else:
+                ws = [float(self.plan.weights[s]) for _, s, _ in fresh]
+                wsum = sum(ws)
+                wf = np.zeros((nd,), np.float32)
+                rows = []
+                for (_, s, b), w in zip(fresh, ws):
+                    pos = s * st.D + b % st.D
+                    wf[pos] = np.float32(w / wsum)
+                    rows.append(pos)
+                stacked = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *[p for p, _, _ in fresh])
+                state["merged"][m] = self._jit_amerge_frame(
+                    stacked, jnp.asarray(rows), jnp.asarray(wf))
+        self._async_state = state
+
+    def _merge_async(self, r: int, main: int, secs: list):
+        stt = self._async_state
+        if self.async_debug:
+            self.async_merge_log.append(
+                (r, main, jax.tree_util.tree_map(np.asarray,
+                                                 stt["merged"][main])))
+        return (stt["merged"][main], stt["walls"].get(main, 0.0),
+                stt["waits"][main], stt["delivered"][main])
 
     _GROUP_SCHEDULERS = {"seq": _merge_seq, "sim": _merge_sim,
                          "async": _merge_async}
@@ -679,55 +858,170 @@ class SatQFLTrainer:
         merged = jax.tree_util.tree_map(_merge, p, self._broadcast_global(mp))
         return merged, group_walls, [0.0], int(sum(delivered))
 
+    # ------------------------------------------------------------------
+    # async v2 ring dispatches (batched executor)
+    # ------------------------------------------------------------------
+    def _ring_send_impl(self, ring, rows, sats, slots):
+        """Scatter this round's trained updates into their ring slots
+        (born mod D); masked rows land on the scratch satellite row."""
+        return jax.tree_util.tree_map(
+            lambda full, x: full.at[sats, slots].set(x), ring, rows)
+
+    def _ring_send_y_impl(self, ring_y, rows, sats, slots, wq, seeds, signs):
+        """secagg send: quantize + pairwise-mask every row, then scatter —
+        one dispatch for the whole cohort."""
+        y = jax.vmap(secagg_mask_stream)(rows, wq, seeds, signs)
+        return ring_y.at[sats, slots].set(y)
+
+    def _async_merge_impl(self, ring, mw, anyv, gparams):
+        """The entire async merge as one masked tensordot over the ring
+        frame: mw (mp, N+1, D) holds the plan's normalized weights (zero
+        = cell not in this round's merge), anyv masks empty mains back to
+        the global model."""
+        mp = mw.shape[0]
+        nd = mw.shape[1] * mw.shape[2]
+        w2 = mw.reshape(mp, nd)
+
+        def one(x, g):
+            xf = x.reshape((nd,) + x.shape[2:]).astype(jnp.float32)
+            xb = jnp.broadcast_to(xf[None], (mp,) + xf.shape)
+            out = jnp.einsum('gk,gk...->g...', w2, xb)
+            k = anyv.reshape((-1,) + (1,) * (out.ndim - 1))
+            return jnp.where(k, out,
+                             g.astype(jnp.float32)[None]).astype(x.dtype)
+
+        return jax.tree_util.tree_map(one, ring, gparams)
+
+    def _amerge_frame_impl(self, entries, rows, wf):
+        """Oracle-side merge: scatter the per-main list into the SAME
+        (N+1)·D frame and run the identical einsum — zero-weight cells
+        are exact no-ops, so this is bit-equal to the ring dispatch."""
+        nd = wf.shape[0]
+
+        def one(x):
+            frame = jnp.zeros((nd,) + x.shape[1:], x.dtype).at[rows].set(x)
+            return jnp.einsum('k,k...->...', wf,
+                              frame.astype(jnp.float32)).astype(x.dtype)
+
+        return jax.tree_util.tree_map(one, entries)
+
+    def _async_merge_y_impl(self, ring_y, sel, corr_seed, corr_sign, sumw,
+                            anyv, gparams):
+        """secagg merge: masked mod-2^32 sum over the ring + the plan's
+        signed correction streams (absent partners' pads cancelled),
+        then dequantize — one dispatch over the stacked main axis."""
+        mp = sel.shape[0]
+        nd = sel.shape[1] * sel.shape[2]
+        yf = ring_y.reshape(nd, -1)
+        agg = jnp.sum(sel.reshape(mp, nd)[:, :, None] * yf[None],
+                      axis=1, dtype=jnp.uint32)
+        corr = jax.vmap(
+            lambda sd, sg: sum_signed_pads(sd, sg, yf.shape[-1]))(
+            corr_seed, corr_sign)
+        merged = q32_to_tree(agg + corr, gparams, sumw)
+
+        def keep(m, g):
+            k = anyv.reshape((-1,) + (1,) * (m.ndim - 1))
+            return jnp.where(k, m, g[None]).astype(g.dtype)
+
+        return jax.tree_util.tree_map(keep, merged, gparams)
+
     def _merge_async_batched(self, r: int, mains: list, groups: dict,
                              mp: int):
+        """Async v2 round: train (one dispatch), scatter-into-ring (one
+        dispatch), exchange the plan's compiled arrivals (one stage
+        dispatch), and merge every main's buffer (one dispatch) — no
+        per-main lists, no per-row tree slicing."""
+        fl, st = self.fl, self.plan.stale
+        cap = self.comm.window_wait_s
+        secagg = fl.agg_security == "secagg"
+        N, D = self.n_sats, st.D
+        assert [int(x) for x in st.main_ids[r] if x >= 0] == mains
+        group_walls = [0.0] * len(mains)
+        group_waits = [0.0] * len(mains)
         secs_all = [s for m in mains for s in groups[m]]
         if secs_all:
             p, _ = self._train_group_batched(
                 secs_all, self._broadcast_global(self._frame), r)
-        group_walls, group_waits = [0.0] * len(mains), [0.0] * len(mains)
-        # window filter precedes the exchange stage (matches the plan's
-        # async edge schedule: windowless secondaries never exchange)
-        rows, edges, row_group = [], [], []
-        j = 0
-        for g, m in enumerate(mains):
-            self.pending.setdefault(m, [])
-            for s in groups[m]:
-                row = j
-                j += 1
-                wait = float(self.plan.window_wait_s[r, s])
-                if not np.isfinite(wait):
-                    continue                # no window in trace: update dropped
-                group_waits[g] = max(group_waits[g],
-                                     min(wait, self.comm.window_wait_s))
-                rows.append(row)
-                edges.append((s, m))
-                row_group.append(g)
-        ok = []
-        if rows:
-            p, walls, ok = self._exchange_rows(p, rows, edges, r, 0, "isl")
-            for t, g in zip(walls, row_group):
-                group_walls[g] = max(group_walls[g], t)
-            for d, row, (s, m) in zip(ok, rows, edges):
-                if not d:
-                    continue                # QBER abort: update dropped
-                p_s = jax.tree_util.tree_map(lambda x: x[row], p)
-                self.pending[m].append((p_s, self._weight_of(s), r))
-        merged_rows, delivered = [], 0
-        for m in mains:
-            q = self.pending.get(m, [])
-            fresh = [(pp, w, born) for (pp, w, born) in q
-                     if r - born <= self.fl.max_staleness]
-            self.pending[m] = []
-            if fresh:
-                merged_rows.append(self._aggregate([pp for pp, _, _ in fresh],
-                                                   [w for _, w, _ in fresh]))
-                delivered += len(fresh)
+            for g, m in enumerate(mains):
+                for s in groups[m]:
+                    group_waits[g] = max(
+                        group_waits[g],
+                        min(float(st.tx_wait_s[r, s]), cap))
+            sats = np.full((self._frame,), N, np.int64)
+            slots = np.zeros((self._frame,), np.int64)
+            for j, s in enumerate(secs_all):
+                if st.send_slot[r, s] >= 0:
+                    sats[j], slots[j] = s, st.send_slot[r, s]
+            if secagg:
+                wq = np.ones((self._frame,), np.int32)
+                seeds = np.zeros((self._frame,) + st.pair_seed.shape[2:],
+                                 np.uint32)
+                signs = np.zeros((self._frame,) + st.pair_sign.shape[2:],
+                                 np.int32)
+                for j, s in enumerate(secs_all):
+                    wq[j] = st.wq[s]
+                    seeds[j] = st.pair_seed[r, s]
+                    signs[j] = st.pair_sign[r, s]
+                self._ring_y = self._jit_ring_send_y(
+                    self._ring_y, p, jnp.asarray(sats), jnp.asarray(slots),
+                    jnp.asarray(wq), jnp.asarray(seeds), jnp.asarray(signs))
             else:
-                merged_rows.append(self.global_params)
-        merged_rows += [self.global_params] * (mp - len(mains))
-        merged = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                        *merged_rows)
+                self._ring = self._jit_ring_send(
+                    self._ring, p, jnp.asarray(sats), jnp.asarray(slots))
+        # arrivals: updates whose window has opened by this round (the
+        # plan's stage-0 edge list IS the delivery schedule)
+        es = self.plan.edges
+        lo, hi = es.stage_bounds(r, 0)
+        arr = [(int(es.src[r, j]), int(es.dst[r, j]), int(es.born[r, j]))
+               for j in range(lo, hi)]
+        if arr:
+            gathered = None
+            if fl.security != "none":
+                gi = np.full((self._async_exframe,), N, np.int64)
+                gd = np.zeros((self._async_exframe,), np.int64)
+                for k, (s, m, b) in enumerate(arr):
+                    gi[k], gd[k] = s, b % D
+                gi, gd = jnp.asarray(gi), jnp.asarray(gd)
+                gathered = ({"y": self._ring_y[gi, gd]} if secagg else
+                            jax.tree_util.tree_map(lambda x: x[gi, gd],
+                                                   self._ring))
+            _, walls, _ = self._exchange_rows(
+                gathered, list(range(len(arr))), [(s, m) for s, m, _ in arr],
+                r, 0, "isl", borns=[b for _, _, b in arr])
+            widx = {m: g for g, m in enumerate(mains)}
+            for t, (s, m, b) in zip(walls, arr):
+                group_walls[widx.get(m, 0)] = max(
+                    group_walls[widx.get(m, 0)], t)
+        # the merge: every main's queue append / staleness filter /
+        # weighted aggregation is already baked into the plan's masks
+        delivered = int(st.merge_count[r].sum())
+        anyv = np.zeros((mp,), bool)
+        anyv[:st.n_mains_max] = st.merge_any[r]
+        if secagg:
+            sel = np.zeros((mp, N + 1, D), np.uint32)
+            sel[:st.n_mains_max] = st.merge_w[r] > 0
+            cs = np.zeros((mp,) + st.corr_seed.shape[2:], np.uint32)
+            cg = np.zeros((mp,) + st.corr_sign.shape[2:], np.int32)
+            cs[:st.n_mains_max] = st.corr_seed[r]
+            cg[:st.n_mains_max] = st.corr_sign[r]
+            sw = np.zeros((mp,), np.float32)
+            sw[:st.n_mains_max] = st.sum_wq[r]
+            merged = self._jit_async_merge_y(
+                self._ring_y, jnp.asarray(sel), jnp.asarray(cs),
+                jnp.asarray(cg), jnp.asarray(sw), jnp.asarray(anyv),
+                self.global_params)
+        else:
+            mw = np.zeros((mp, N + 1, D), np.float32)
+            mw[:st.n_mains_max] = st.merge_w[r]
+            merged = self._jit_async_merge(self._ring, jnp.asarray(mw),
+                                           jnp.asarray(anyv),
+                                           self.global_params)
+        if self.async_debug:
+            for g, m in enumerate(mains):
+                self.async_merge_log.append(
+                    (r, m, jax.tree_util.tree_map(
+                        lambda x: np.asarray(x[g]), merged)))
         return merged, group_walls, group_waits, delivered
 
     def _merge_seq_batched(self, r: int, mains: list, groups: dict,
@@ -815,13 +1109,26 @@ class SatQFLTrainer:
 
     def _round_hierarchical(self, r: int) -> int:
         """Algorithm 1 proper: per-group merge (mode-specific), optional
-        main-satellite training, feeder uplink, global FedAvg."""
+        main-satellite training, feeder uplink, global FedAvg.
+
+        The global FedAvg runs through the SAME ``_frame``-padded
+        weighted reduction as the batched driver (zero-weight pad rows
+        are exact float no-ops), so the oracle and batched paths differ
+        only where local training is vmapped — not in aggregation order.
+        """
         fl = self.fl
         merge_group = self._GROUP_SCHEDULERS[fl.mode]
-        main_models, main_ws = [], []
+        if fl.mode == "async":
+            # cross-group phases (training, deferred arrivals, buffer
+            # appends) run once per round; the per-main scheduler below
+            # then reads its group's prepared merge
+            self._async_oracle_prepare(r)
+        mp = self._frame
+        main_ws = np.zeros((mp,), np.float32)
+        main_models = [None] * mp
         group_walls, feeder_walls, group_waits = [0.0], [0.0], [0.0]
         participants = 0
-        for main, secs in self.plan.groups(r).items():
+        for g, (main, secs) in enumerate(self.plan.groups(r).items()):
             merged, wall, wait, delivered = merge_group(self, r, main, secs)
             group_walls.append(wall)
             group_waits.append(wait)
@@ -833,11 +1140,16 @@ class SatQFLTrainer:
             feeder_walls.append(t)
             if merged is None:
                 continue                    # feeder QBER abort: group lost
-            main_models.append(merged)
-            main_ws.append(self._weight_of(main)
-                           + sum(self._weight_of(s) for s in secs))
-        if main_models:
-            self.global_params = self._aggregate(main_models, main_ws)
+            main_models[g] = merged
+            main_ws[g] = (self._weight_of(main)
+                          + sum(self._weight_of(s) for s in secs))
+        if main_ws.any():
+            zeros = jax.tree_util.tree_map(jnp.zeros_like,
+                                           self.global_params)
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[m if m is not None else zeros for m in main_models])
+            self.global_params = self._wmean_rows(stacked, main_ws)
         # round wall: slowest group (groups run in parallel), then the
         # slowest feeder uplink, plus the global broadcast back down;
         # window waits overlap the same way, so the round blocks on the

@@ -16,23 +16,31 @@ from repro.security.otp import (
     tree_to_u32, u32_to_tree,
     encrypt_tree_rows, decrypt_tree_rows, pad_u32_rows,
     tree_to_u32_rows, u32_to_tree_rows,
+    tree_to_q32, q32_to_tree, sum_signed_pads, secagg_mask_stream,
+    SECAGG_FRAC_BITS, SECAGG_CLIP, SECAGG_W_MAX,
 )
 from repro.security.mac import (
     poly_mac_u32, mac_verify, poly_mac_rows, mac_verify_rows, P31,
 )
 from repro.security.keys import (
     KeyManager, EdgeKey, canonical_edge, mac_key_mix, round_seed_mix,
+    pairwise_mask_seed, MASK_DOMAIN,
 )
 from repro.security.errors import SecurityError
-from repro.security.fernet_lite import fernet_encrypt, fernet_decrypt
+from repro.security.fernet_lite import (
+    fernet_encrypt, fernet_decrypt, fernet_encrypt_rows, fernet_decrypt_rows,
+)
 
 __all__ = [
     "encrypt_tree", "decrypt_tree", "encrypt_flat_u32", "pad_u32",
     "tree_to_u32", "u32_to_tree",
     "encrypt_tree_rows", "decrypt_tree_rows", "pad_u32_rows",
     "tree_to_u32_rows", "u32_to_tree_rows",
+    "tree_to_q32", "q32_to_tree", "sum_signed_pads", "secagg_mask_stream",
+    "SECAGG_FRAC_BITS", "SECAGG_CLIP", "SECAGG_W_MAX",
     "poly_mac_u32", "mac_verify", "poly_mac_rows", "mac_verify_rows", "P31",
     "KeyManager", "EdgeKey", "canonical_edge", "mac_key_mix",
-    "round_seed_mix", "SecurityError",
-    "fernet_encrypt", "fernet_decrypt",
+    "round_seed_mix", "pairwise_mask_seed", "MASK_DOMAIN", "SecurityError",
+    "fernet_encrypt", "fernet_decrypt", "fernet_encrypt_rows",
+    "fernet_decrypt_rows",
 ]

@@ -28,8 +28,14 @@ import numpy as np
 
 from repro.quantum.qkd import (bb84_keygen, bb84_keygen_edges,
                                derive_pad_seed, derive_pad_seeds)
+from repro.security.otp import sum_signed_pads
 
 QBER_ABORT = 0.11   # standard BB84 abort threshold
+
+# domain-separation constant for secagg pairwise mask streams: a pair of
+# satellites may ALSO share a data edge (the same BB84 key), and its OTP
+# pads must never collide with the additive mask pads
+MASK_DOMAIN = np.uint32(0x6D61736B)   # "mask"
 
 
 def round_seed_mix(seeds, round_idx):
@@ -51,6 +57,18 @@ def mac_key_mix(round_seeds):
     s = ((base * np.uint64(747796405))
          + np.uint64(2891336453)).astype(np.uint32)
     return r, s
+
+
+def pairwise_mask_seed(edge_seed, born):
+    """Per-(pair, born-round) secagg mask seed.
+
+    Domain-separated from the pair's OTP pad schedule (``round_seed_mix``
+    on the raw edge seed) by xoring :data:`MASK_DOMAIN` into the base
+    seed before the round fold-in. Vectorized over numpy shapes.
+    """
+    return round_seed_mix(
+        np.asarray(edge_seed, np.uint64).astype(np.uint32) ^ MASK_DOMAIN,
+        born)
 
 
 def canonical_edge(edge: tuple) -> tuple:
@@ -133,6 +151,40 @@ class KeyManager:
 
     def get(self, edge: tuple) -> EdgeKey:
         return self.establish(edge)
+
+    # ------------------------------------------------------------------
+    # secagg pairwise mask shares (dropout-tolerant aggregation)
+    # ------------------------------------------------------------------
+    def share_edges(self, pairs) -> dict:
+        """Deal pairwise secagg mask shares for a cohort's satellite pairs.
+
+        Each pair's share is rooted in its BB84-established edge key (the
+        decentralized-key flavor: no extra trust beyond the QKD fabric),
+        established for ALL pairs in one vmapped BB84 dispatch. Returns
+        {canonical pair: base edge seed}; per-(pair, born) mask seeds are
+        derived via :func:`pairwise_mask_seed`, so mask streams never
+        collide with the pair's OTP pads or across born rounds.
+        """
+        return {ek.edge: int(ek.seed)
+                for ek in self.establish_edges(list(pairs))}
+
+    def recover_masks(self, pairs, borns, signs, n_words: int):
+        """Reconstruct Σ sign · mask-pad for absent cohort partners.
+
+        The dealer-side half of dropout tolerance: when a satellite
+        QBER-aborts or misses its window, the pairwise pads its surviving
+        partners already folded into their contributions are cancelled by
+        re-deriving exactly those signed streams from the key registry.
+        Returns an (n_words,) uint32 correction (mod 2^32 — exact).
+        """
+        if not pairs:
+            return jnp.zeros((n_words,), jnp.uint32)
+        eks = self.establish_edges(list(pairs))
+        seeds = np.asarray([pairwise_mask_seed(ek.seed, b)
+                            for ek, b in zip(eks, borns)], np.uint32)
+        return sum_signed_pads(jnp.asarray(seeds),
+                               jnp.asarray(np.asarray(signs, np.int32)),
+                               n_words)
 
     def compromised_nodes(self) -> set:
         out = set()

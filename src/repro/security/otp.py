@@ -96,6 +96,97 @@ def decrypt_tree_rows(tree, seeds_u32):
 
 
 # ---------------------------------------------------------------------------
+# secagg fixed-point domain (dropout-tolerant secure aggregation)
+#
+# Bonawitz-style pairwise masking needs ADDITIVE masks that cancel under the
+# aggregation sum, which XOR pads cannot do — so secagg contributions live in
+# a mod-2^32 fixed-point domain: params are quantized to int32 with
+# SECAGG_FRAC_BITS fractional bits (clipped to ±SECAGG_CLIP, i.e. |x| ≤ 16),
+# scaled by a small integer FedAvg weight, and masked with signed threefry
+# pad streams. uint32 wraparound arithmetic is exact/associative, so any
+# execution order (per-main host lists, or one stacked ring dispatch) gives
+# bit-identical aggregates, and a dropped satellite's pad is cancelled
+# EXACTLY by re-adding the mirrored signed streams (``sum_signed_pads``).
+#
+# Overflow budget: |w·q| ≤ SECAGG_W_MAX · SECAGG_CLIP < 2^23, so ≤ 2^7
+# summed entries stay below 2^31 and the aggregate bitcasts back to a
+# faithful int32.
+# ---------------------------------------------------------------------------
+
+SECAGG_FRAC_BITS = 16                 # fixed-point scale 2^16 (~1.5e-5 step)
+SECAGG_CLIP = 1 << 20                 # quantized magnitude cap (|x| ≤ 16.0)
+SECAGG_W_MAX = 7                      # integer FedAvg weight cap
+
+
+def tree_to_q32(tree) -> jax.Array:
+    """Quantize a float32 pytree to a flat int32 fixed-point stream."""
+    out = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if jnp.dtype(leaf.dtype) != jnp.float32:
+            raise TypeError(
+                "secagg quantization is defined for float32 leaves only, "
+                f"got {leaf.dtype}")
+        q = jnp.clip(jnp.round(leaf * jnp.float32(1 << SECAGG_FRAC_BITS)),
+                     -SECAGG_CLIP, SECAGG_CLIP)
+        out.append(q.astype(jnp.int32).reshape(-1))
+    return jnp.concatenate(out) if out else jnp.zeros((0,), jnp.int32)
+
+
+def q32_to_tree(vec_u32: jax.Array, like, denom):
+    """Dequantize an aggregated mod-2^32 stream back into ``like``'s tree.
+
+    ``denom`` is the (traced) integer-weight sum of the aggregate; leading
+    batch axes of ``vec_u32`` broadcast through (rows dequantize
+    independently — used by the stacked ring merge).
+    """
+    q = jax.lax.bitcast_convert_type(vec_u32, jnp.int32).astype(jnp.float32)
+    scale = jnp.float32(1 << SECAGG_FRAC_BITS) * jnp.maximum(
+        jnp.asarray(denom, jnp.float32), 1.0)
+    x = q / jnp.reshape(scale, jnp.shape(scale) + (1,))
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    batch = vec_u32.shape[:-1]
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        out.append(x[..., off:off + n].reshape(batch + leaf.shape))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sum_signed_pads(seeds_u32, signs, n: int) -> jax.Array:
+    """Σ_p sign_p · pad(seed_p, n) mod 2^32 — the pairwise-mask stream.
+
+    seeds (P,) uint32, signs (P,) int (+1 add, −1 subtract, 0 skip) →
+    (n,) uint32. Exact modular arithmetic: summation order cannot change
+    a bit, so host-loop and stacked-dispatch callers agree exactly.
+    """
+    seeds = jnp.asarray(seeds_u32, jnp.uint32)
+    signs = jnp.asarray(signs, jnp.int32)
+    if seeds.shape[0] == 0:
+        return jnp.zeros((n,), jnp.uint32)
+    pads = pad_u32_rows(seeds, n)
+    signed = jnp.where((signs > 0)[:, None], pads, jnp.uint32(0) - pads)
+    signed = jnp.where((signs != 0)[:, None], signed, jnp.uint32(0))
+    return jnp.sum(signed, axis=0, dtype=jnp.uint32)
+
+
+def secagg_mask_stream(tree, w_int, pair_seeds, pair_signs) -> jax.Array:
+    """One satellite's masked secagg contribution (what goes on the wire).
+
+    y = bitcast_u32(w_int · q(tree)) + Σ sign · pad(seed)   (mod 2^32)
+
+    The pair seeds/signs come from the cohort's pairwise mask shares
+    (``KeyManager.share_edges`` / the plan's compiled tables); partners
+    that fail to deliver are cancelled later via
+    ``KeyManager.recover_masks`` / the plan's correction tables.
+    """
+    q = tree_to_q32(tree)
+    y = jax.lax.bitcast_convert_type(
+        q * jnp.asarray(w_int, jnp.int32), jnp.uint32)
+    return y + sum_signed_pads(pair_seeds, pair_signs, q.shape[0])
+
+
+# ---------------------------------------------------------------------------
 # pytree <-> flat u32 view (for MAC computation / wire format)
 # ---------------------------------------------------------------------------
 

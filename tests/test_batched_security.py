@@ -160,9 +160,16 @@ def test_plan_edge_schedule_matches_groups(setup, mode):
             # first-contact marks exactly the first planned use
             assert bool(es.first[r, j]) == (e not in seen)
             seen.add(e)
-            # key material matches the registry's fold-in schedule
+            # key material matches the registry's fold-in schedule; pad
+            # seeds fold in the BORN round (= r everywhere except async
+            # deferred deliveries, whose payload trained rounds earlier)
+            born = int(es.born[r, j])
+            if mode != "async":
+                assert born == r
+            else:
+                assert 0 <= born <= r
             ek = km.get(e)
-            assert int(es.seed[r, j]) == int(ek.round_seed(r))
+            assert int(es.seed[r, j]) == int(ek.round_seed(born))
             assert bool(es.abort[r, j]) == ek.compromised
 
 
