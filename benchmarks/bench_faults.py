@@ -1,0 +1,128 @@
+"""Chaos sweep: injected fault plane vs delivered updates (PR 8).
+
+Sweeps link-flap probability 0 -> 30% across all four schedules on a
+dense synthetic constellation and records, per (mode, rate): delivered
+updates, injected flaps, retransmissions, losses, recoveries. The async
+schedule runs twice — max_retries=0 vs max_retries=2 — so the payload
+quantifies how much of the flap-induced delivery loss the bounded-
+exponential-backoff retransmit path buys back (the PR's acceptance bar:
+at 10% flap, retry recovers at least half of the deliveries the
+no-retry run loses versus fault-free).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+N_CLASSES = 7
+
+
+def _model():
+    from repro.models import get_config, get_model
+    cfg = get_config("vqc-satqfl").replace(vqc_qubits=2, vqc_layers=1,
+                                           n_features=2)
+    return cfg, get_model(cfg)
+
+
+def _trace(n_sats: int, rounds: int, step_s: float = 60.0):
+    """Dense windows: every secondary sees main 0 at every step, so a
+    flapped transmission always has a later window to retry into."""
+    from repro.constellation.topology import ConstellationTrace
+    N, T = n_sats, rounds + 2            # slack steps for late retries
+    sg = np.zeros((N, T), bool)
+    sg[0, :] = True
+    sg[N - 1, :] = True
+    ss = np.zeros((N, N, T), bool)
+    ss[1:, 0, :] = True
+    ss = ss | ss.transpose(1, 0, 2)
+    ss[np.arange(N), np.arange(N)] = False
+    pos = np.zeros((N, T, 3))
+    pos[:, :, 0] = (np.arange(N) + 1.0)[:, None] * 1000.0
+    return ConstellationTrace(times_s=np.arange(T) * step_s, sat_pos=pos,
+                              sg_access=sg[:, None, :], ss_access=ss,
+                              gs_names=["GS0"], n_sats=N)
+
+
+def _data(n_sats: int, seed: int = 0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    sats = [{
+        "features": jnp.asarray(
+            rng.uniform(0, np.pi, (8, 2)).astype(np.float32)),
+        "labels": jnp.asarray(rng.integers(0, N_CLASSES, (8,)), jnp.int32),
+    } for _ in range(n_sats)]
+    batch = {
+        "features": jnp.asarray(
+            rng.uniform(0, np.pi, (8, 2)).astype(np.float32)),
+        "labels": jnp.asarray(rng.integers(0, N_CLASSES, (8,)), jnp.int32),
+    }
+    return sats, {"val": batch, "test": batch}
+
+
+def _run(mode: str, flap: float, retries: int, *, n_sats: int, rounds: int):
+    from repro.core import SatQFLConfig, SatQFLTrainer
+    cfg, api = _model()
+    fl = SatQFLConfig(mode=mode, n_rounds=rounds, local_steps=2,
+                      batch_size=4, eval_every=10 ** 9,
+                      link_flap_rate=flap, fault_seed=17,
+                      max_retries=retries if mode == "async" else 0)
+    tr = SatQFLTrainer(cfg, api, fl, _trace(n_sats, rounds),
+                       *_data(n_sats))
+    hist = tr.run()
+    rec = {"mode": mode, "flap_rate": flap, "max_retries": fl.max_retries,
+           "deliveries": int(sum(m.participants for m in hist)),
+           "flaps": 0, "retries": 0, "lost": 0, "recovered": 0}
+    for fr in tr.fault_reports:
+        rec["flaps"] += fr.link_flaps
+        rec["retries"] += fr.retries
+        rec["lost"] += fr.lost
+        rec["recovered"] += fr.recovered
+    return rec
+
+
+def sweep(rates, *, n_sats: int = 6, rounds: int = 6):
+    records = []
+    for rate in rates:
+        for mode in ("qfl", "sim", "seq", "async"):
+            records.append(_run(mode, rate, 0, n_sats=n_sats, rounds=rounds))
+        records.append(_run("async", rate, 2, n_sats=n_sats, rounds=rounds))
+
+    def _get(mode, rate, retries):
+        return next(r for r in records
+                    if r["mode"] == mode and r["flap_rate"] == rate
+                    and r["max_retries"] == retries)
+
+    probe = min((r for r in rates if r > 0), default=None)
+    recovery = None
+    if probe is not None:
+        clean = _get("async", min(rates), 0)["deliveries"]
+        nore = _get("async", probe, 0)["deliveries"]
+        retry = _get("async", probe, 2)["deliveries"]
+        recovery = {"flap_rate": probe, "deliveries_clean": clean,
+                    "deliveries_no_retry": nore,
+                    "deliveries_retry": retry,
+                    "lost_by_flaps": clean - nore,
+                    "recovered_by_retry": retry - nore}
+    return {"records": records, "recovery": recovery}
+
+
+def quick():
+    payload = sweep([0.0, 0.1], n_sats=5, rounds=4)
+    rec = payload["recovery"]
+    derived = (f"retry +{rec['recovered_by_retry']}/"
+               f"-{rec['lost_by_flaps']} deliveries @10% flap"
+               if rec else "no faulted rate swept")
+    return payload, derived
+
+
+def full():
+    payload = sweep([0.0, 0.1, 0.2, 0.3], n_sats=8, rounds=12)
+    rec = payload["recovery"]
+    derived = (f"retry +{rec['recovered_by_retry']}/"
+               f"-{rec['lost_by_flaps']} deliveries @10% flap"
+               if rec else "no faulted rate swept")
+    return payload, derived
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(full(), indent=1, default=float))

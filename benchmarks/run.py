@@ -32,7 +32,7 @@ def main(argv=None):
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_comm, bench_constellation,
+    from benchmarks import (bench_comm, bench_constellation, bench_faults,
                             bench_frameworks, bench_kernels, bench_round,
                             bench_security, bench_vqc, roofline)
 
@@ -53,7 +53,8 @@ def main(argv=None):
             "kernels": bench_kernels.quick,
             "vqc": bench_vqc.quick,
             "round": bench_round.quick,
-            "roofline": roofline.quick,
+            "faults": bench_faults.full,
+            "roofline": roofline.full,
         }
     else:
         benches = {
@@ -64,6 +65,7 @@ def main(argv=None):
             "kernels": bench_kernels.quick,
             "vqc": bench_vqc.quick,
             "round": bench_round.quick,
+            "faults": bench_faults.quick,
             "roofline": roofline.quick,
         }
 

@@ -79,6 +79,26 @@ class CheckpointCorrupt(Exception):
     pass
 
 
+def read_metadata(path_dir: str, step: int | None = None):
+    """(step, metadata) of a checkpoint WITHOUT decoding the payload.
+
+    Callers whose load template depends on the checkpoint's contents
+    (e.g. the host trainer's variable-length async buffer lists) read
+    this first, build the matching template, then ``load_checkpoint``.
+    The payload MAC is verified here too — a corrupted file fails loudly
+    even when only its metadata is wanted."""
+    if step is None:
+        step = latest_step(path_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {path_dir}")
+    path = os.path.join(path_dir, f"step_{step:08d}.msgpack")
+    with open(path, "rb") as f:
+        doc = msgpack.unpackb(f.read(), raw=False)
+    if _mac_bytes(doc["payload"]) != doc["mac"]:
+        raise CheckpointCorrupt(f"MAC mismatch in {path}")
+    return step, doc["metadata"]
+
+
 def load_checkpoint(path_dir: str, like, step: int | None = None):
     """Load into the structure of `like` (shapes/dtypes verified).
 
@@ -143,6 +163,11 @@ class CheckpointManager:
             if (m := _STEP_RE.match(f)))
         for s in steps[:-self.keep]:
             os.remove(os.path.join(self.dir, f"step_{s:08d}.msgpack"))
+        for f in os.listdir(self.dir):
+            # leftover .tmp = a torn write (process died mid-save); it was
+            # never visible to latest_step, so deleting it is always safe
+            if f.endswith(".msgpack.tmp"):
+                os.remove(os.path.join(self.dir, f))
 
     @property
     def latest(self):

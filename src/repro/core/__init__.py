@@ -17,14 +17,14 @@ vectorized ``RoundPlan`` arrays both engines consume), same semantics:
 """
 from repro.core.flconfig import SatQFLConfig
 from repro.core.comm import CommModel, CommLog
-from repro.core.plan import RoundPlan, compile_round_plan
-from repro.core.round import SatQFLTrainer, evaluate
+from repro.core.plan import FaultSchedule, RoundPlan, compile_round_plan
+from repro.core.round import FaultReport, SatQFLTrainer, evaluate
 from repro.core.dist import (
     FLState, make_fl_round, fl_input_specs, make_secure_exchange,
 )
 
 __all__ = [
     "SatQFLConfig", "CommModel", "CommLog", "SatQFLTrainer", "evaluate",
-    "RoundPlan", "compile_round_plan",
+    "RoundPlan", "compile_round_plan", "FaultSchedule", "FaultReport",
     "FLState", "make_fl_round", "fl_input_specs", "make_secure_exchange",
 ]

@@ -78,20 +78,25 @@ class CommLog:
     def add_security(self, seconds: float):
         self.security_s += seconds
 
-    def close_round(self):
+    def close_round(self, faults: dict | None = None):
         self.per_round.append(self.total_s)
         prev = (self.round_details[-1]["cum"] if self.round_details
                 else (0.0, 0.0, 0.0, 0, 0))
         cum = (self.transfer_s, self.wait_s, self.security_s,
                self.bytes_moved, self.n_transfers)
-        self.round_details.append({
+        detail = {
             "transfer_s": cum[0] - prev[0],
             "wait_s": cum[1] - prev[1],
             "security_s": cum[2] - prev[2],
             "bytes_moved": cum[3] - prev[3],
             "n_transfers": cum[4] - prev[4],
             "cum": cum,
-        })
+        }
+        if faults is not None:
+            # present ONLY when a fault plane is active, so fault-free
+            # round details stay byte-identical to the pre-fault format
+            detail["faults"] = faults
+        self.round_details.append(detail)
 
     @property
     def total_s(self) -> float:

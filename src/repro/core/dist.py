@@ -152,8 +152,8 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
                   ctx: DistCtx | None = None):
     """Build the jit-able round function.
 
-    round_fn(state, batches, part_mask, seeds, weights=None)
-        -> (state, metrics)
+    round_fn(state, batches, part_mask, seeds, weights=None,
+             fault_mask=None) -> (state, metrics)
 
       batches:   pytree, leaves (n_sat, steps, batch, ...) — steps is
                  local_steps (sim/async/qfl) or seq_hops·local_steps (seq:
@@ -161,6 +161,13 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
       part_mask: (n_sat,) float — visibility-window participation (async)
       seeds:     (n_sat,) uint32 — per-edge QKD-derived pad seeds
       weights:   (n_sat,) float — FedAvg sample-count weights (None = uniform)
+      fault_mask:(n_sat,) float, 1 = healthy / 0 = crashed (None = all
+                 healthy; ``plan.fault_mask(r)``). Graceful degradation
+                 mirrors the host engine: a crashed satellite trains
+                 nothing (params/opt slots frozen), sim/qfl drop its
+                 FedAvg weight, seq passes the chain through its hop
+                 untrained, async removes it from both delivery and
+                 rebuffering (its stale entry just ages)
 
     All three per-round inputs come from a compiled
     :class:`repro.core.plan.RoundPlan` (``plan.dist_inputs(r)``) so the
@@ -196,9 +203,17 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
 
         return jax.tree_util.tree_map(slc, batches)
 
-    def round_fn(state: FLState, batches, part_mask, seeds, weights=None):
+    def round_fn(state: FLState, batches, part_mask, seeds, weights=None,
+                 fault_mask=None):
         r = state.round_idx
         step0 = r * fl.local_steps
+        if fault_mask is not None and security == "secagg":
+            # the ring-PRF masks telescope to zero only over the FULL
+            # satellite set — a dropped row would leave its neighbors'
+            # pads uncancelled (the host engine's async secagg has the
+            # dropout-recovery construction; this in-graph one does not)
+            raise ValueError("secagg cannot drop crashed rows — "
+                             "run faults with security 'none'/'otp'")
         # secagg's ring masks telescope to zero only under UNIFORM weights;
         # sample-count FedAvg there would need weighted secret sharing
         if weights is None or security == "secagg":
@@ -207,16 +222,34 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
             w_agg = weights
         mac_ok = None           # otp_gather: per-round integrity verdict
 
+        def _freeze_faulted(new, old):
+            """Crashed rows keep their pre-round value (no local training)."""
+            if fault_mask is None:
+                return new
+            return jax.tree_util.tree_map(
+                lambda n, s: jnp.where(_bshape(fault_mask, n) > 0, n, s),
+                new, old)
+
+        def _masked_mean_loss(l):
+            """Mean loss over the rows that actually trained."""
+            if fault_mask is None:
+                return jnp.mean(l)
+            return jnp.sum(l * fault_mask) / jnp.maximum(
+                jnp.sum(fault_mask), 1.0)
+
         if fl.mode == "seq":
             # pipelined sequential: train -> secure hand-off to next satellite
             p, o = state.params, state.opt_slots
             losses = jnp.zeros(())
             for hop in range(seq_hops):
-                p, o, l = vtrain(p, o, _hop_batches(batches, hop),
-                                 step0 + hop)
+                p2, o2, l = vtrain(p, o, _hop_batches(batches, hop),
+                                   step0 + hop)
+                # a crashed satellite's hop is a pass-through: the chain
+                # reroutes over it untrained, its optimizer slot frozen
+                p, o = _freeze_faulted(p2, p), _freeze_faulted(o2, o)
                 p = exchange(p, seeds ^ jnp.uint32(hop + 1), r)
                 p = jax.tree_util.tree_map(lambda x: jnp.roll(x, 1, axis=0), p)
-                losses = losses + jnp.mean(l)
+                losses = losses + _masked_mean_loss(l)
             # each slot now holds a chain that visited seq_hops satellites,
             # so per-satellite sample weights don't map to slots — uniform
             new_params = _wmean_sats(p, jnp.ones((n_sats,)))
@@ -224,9 +257,11 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
             new_stale, new_age = state.stale, state.stale_age
         else:
             p, o, l = vtrain(state.params, state.opt_slots, batches, step0)
-            mean_loss = jnp.mean(l)
+            p = _freeze_faulted(p, state.params)
+            o = _freeze_faulted(o, state.opt_slots)
+            mean_loss = _masked_mean_loss(l)
             if fl.mode == "sim" or fl.mode == "qfl":
-                w = w_agg
+                w = (w_agg if fault_mask is None else w_agg * fault_mask)
                 if security == "otp_gather":
                     # PAPER-FAITHFUL topology: the aggregator receives every
                     # satellite's ciphertext (an all-gather of the stacked
@@ -248,15 +283,29 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
                 else:
                     moved = exchange(p, seeds, r)
                 new_params = _wmean_sats(moved, w)
+                if fault_mask is not None:
+                    # every satellite crashed → keep the model (a
+                    # zero-weight mean would zero every parameter)
+                    any_w = jnp.sum(w) > 0
+                    new_params = jax.tree_util.tree_map(
+                        lambda m, old: jnp.where(any_w, m, old),
+                        new_params, state.params)
                 new_stale, new_age = state.stale, state.stale_age
             elif fl.mode == "async":
-                # deliver participants now; buffer the rest (bounded staleness)
+                # deliver participants now; buffer the rest (bounded
+                # staleness). A crashed satellite neither delivers nor
+                # rebuffers — its frozen params are not an update
+                live = (part_mask if fault_mask is None
+                        else part_mask * fault_mask)
                 moved = exchange(p, seeds, r)
-                sel_now = part_mask                       # binary selects
+                sel_now = live                            # binary selects
                 # stale buffer usable if within Δ_max
                 stale_ok = ((state.stale_age >= 0)
                             & (state.stale_age <= fl.max_staleness))
-                sel_stale = stale_ok.astype(jnp.float32) * (1.0 - part_mask)
+                # keyed off sel_now, not part_mask: a crashed-but-visible
+                # satellite delivers nothing fresh, yet its previously
+                # buffered update is aggregator-side and still folds in
+                sel_stale = stale_ok.astype(jnp.float32) * (1.0 - sel_now)
                 combined = jax.tree_util.tree_map(
                     lambda now, st: (now.astype(jnp.float32)
                                      * _bshape(sel_now, now)
@@ -271,13 +320,14 @@ def make_fl_round(model_cfg, api, fl: SatQFLConfig, optimizer: Optimizer,
                 new_params = jax.tree_util.tree_map(
                     lambda m, old: jnp.where(any_w, m, old),
                     _wmean_sats(combined, w_tot), state.params)
-                # rebuffer: non-participants' fresh updates wait for a window
+                # rebuffer: non-participants' fresh updates wait for a window;
+                # crashed rows produced no update, so their entry just ages
                 new_stale = jax.tree_util.tree_map(
                     lambda fresh, st: jnp.where(
-                        _bshape(part_mask, fresh) > 0, fresh.astype(jnp.float32),
+                        _bshape(live, fresh) > 0, fresh.astype(jnp.float32),
                         st.astype(jnp.float32)).astype(fresh.dtype),
                     moved, state.stale)
-                new_age = jnp.where(part_mask > 0, 0, state.stale_age + 1)
+                new_age = jnp.where(live > 0, 0, state.stale_age + 1)
             else:
                 raise ValueError(fl.mode)
 

@@ -39,6 +39,117 @@ from repro.security.otp import SECAGG_CLIP as _SECAGG_CLIP, SECAGG_W_MAX
 
 GROUND = -1    # edge endpoint id for the ground station ("gs")
 
+# fault-site hash domains — distinct constants keep the four fault kinds
+# statistically independent even at the same (round, edge/sat) site
+_FAULT_KIND = {"flap": 0x464C4150, "crash": 0x43525348,
+               "strag": 0x53545247, "tamper": 0x54414D50}
+
+
+def _edge_ids(edge, n_sats: int) -> tuple[int, int]:
+    """Order-free integer endpoints of an edge; the ground station maps
+    to ``n_sats`` so ('gs', s) and (s, 'gs') hash identically."""
+    ids = [n_sats if e in ("gs", GROUND) else int(e) for e in edge]
+    return min(ids), max(ids)
+
+
+def fault_site_u32(fault_seed: int, kind: str, round_idx: int, a: int,
+                   b: int = 0, attempt: int = 0) -> np.uint32:
+    """Deterministic per-site fault hash — a chain of the SAME numpy
+    mixer the pad-seed schedule uses (``round_seed_mix``), so the
+    per-client oracle and the batched executor derive identical sites
+    from (seed, kind, round, endpoints, attempt) with no shared state."""
+    h = round_seed_mix(np.uint32((fault_seed ^ _FAULT_KIND[kind])
+                                 & 0xFFFFFFFF), round_idx)
+    h = round_seed_mix(h, a + 1)
+    h = round_seed_mix(h, b + 1)
+    return np.uint32(round_seed_mix(h, attempt + 0x51ED))
+
+
+def _fault_hit(u32, rate: float) -> bool:
+    """uint32 hash < rate·2³² — exact at rate 0 and 1."""
+    return int(u32) < int(rate * 4294967296.0)
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """Seeded fault-injection schedule compiled into the RoundPlan.
+
+    Every fault site is a pure function of ``(fault_seed, kind, round,
+    endpoints[, attempt])`` through :func:`fault_site_u32`, thresholded
+    by the config rates — the dense arrays here are just that function
+    tabulated, and the pointwise accessors (``flap_of`` / ``tamper_of``)
+    recompute it, so the scalar oracle (which never sees edge-slot
+    indices) cannot drift from the batched path (which reads the
+    arrays). With every rate at 0 ``compile_round_plan`` attaches no
+    schedule at all (``plan.faults is None``): the fault plane is
+    bit-invisible until a knob is turned.
+
+    Semantics (mirrors the QBER-drop contract, see README):
+
+    * ``crash[r, s]`` — satellite ``s``'s payload computer is down for
+      round ``r``: it neither trains nor sends (sim/qfl lose its FedAvg
+      weight, seq chains skip the hop, async schedules no send). A
+      crashed MAIN still relays/merges/feeds (the comms bus survives) but
+      skips its own ``main_trains`` step.
+    * ``straggler[r, s]`` — satellite ``s`` is slow: its upload wall
+      (or async transmit wait) gains ``straggler_extra_s`` seconds.
+    * ``link_flap[r, j]`` — EdgeSchedule slot ``(r, j)`` drops before
+      the payload moves (establishment time, if due, is still paid):
+      the row is dropped exactly like a QBER abort. Async ISL arrivals
+      are never flapped here — their flap/retry history was already
+      resolved by the compiled retransmit simulation (the arrival
+      schedule contains only the surviving attempts).
+    * ``tamper[r, j]`` — nonzero word XORed into the wire stream of
+      slot ``(r, j)``; the receiver's GF(2³¹−1) MAC rejects it and the
+      update is dropped AFTER transfer+crypto time was paid.
+    * ``flap_events / retry_events / lost_events / recovered_events`` —
+      the async retransmit ledger, charged to the round each attempt
+      targeted: failed transmissions, retransmissions launched, updates
+      conclusively lost, and deliveries that arrived via ≥1 retry.
+    """
+    seed: int
+    n_sats: int
+    link_flap_rate: float
+    crash_rate: float
+    straggler_rate: float
+    corrupt_rate: float
+    straggler_extra_s: float
+    max_retries: int
+    retry_backoff_steps: int
+    crash: np.ndarray             # (R, N) bool
+    straggler: np.ndarray         # (R, N) bool
+    link_flap: np.ndarray         # (R, E_max) bool — EdgeSchedule-aligned
+    tamper: np.ndarray            # (R, E_max) uint32 — 0 = clean
+    attempt: np.ndarray           # (R, E_max) int32 — delivery attempt of
+                                  #   async arrival slots (0 elsewhere)
+    flap_events: np.ndarray       # (R,) int32
+    retry_events: np.ndarray      # (R,) int32
+    lost_events: np.ndarray       # (R,) int32
+    recovered_events: np.ndarray  # (R,) int32
+    recovered: np.ndarray         # (R, N) bool — update born (r, s)
+                                  #   delivered only via retransmit
+
+    def flap_of(self, born: int, edge, attempt: int = 0) -> bool:
+        """Pointwise link-flap test — same hash the arrays tabulate."""
+        if self.link_flap_rate <= 0:
+            return False
+        a, b = _edge_ids(edge, self.n_sats)
+        return _fault_hit(fault_site_u32(self.seed, "flap", born, a, b,
+                                         attempt), self.link_flap_rate)
+
+    def tamper_of(self, born: int, edge) -> int:
+        """Pointwise tamper word (0 = clean) — same hash as the array."""
+        if self.corrupt_rate <= 0:
+            return 0
+        a, b = _edge_ids(edge, self.n_sats)
+        u = fault_site_u32(self.seed, "tamper", born, a, b)
+        if not _fault_hit(u, self.corrupt_rate):
+            return 0
+        return int(np.uint32(u) | np.uint32(1))     # never zero
+
+    def straggler_extra(self, r: int, s: int) -> float:
+        return self.straggler_extra_s if self.straggler[r, s] else 0.0
+
 
 @dataclass(frozen=True)
 class EdgeSchedule:
@@ -170,6 +281,8 @@ class RoundPlan:
     weights: np.ndarray           # (N,) float32 — FedAvg aggregation weights w_i
     edges: EdgeSchedule | None = None   # per-round secure-exchange schedule
     stale: StalenessSchedule | None = None  # async bounded-staleness buffer
+    faults: FaultSchedule | None = None     # seeded fault-injection plane
+                                  #   (None whenever every fault rate is 0)
 
     # ------------------------------------------------------------------
     # per-round views
@@ -183,6 +296,27 @@ class RoundPlan:
             out[int(a[s])].append(int(s))
         return out
 
+    def live_groups(self, r: int) -> dict[int, list[int]]:
+        """``groups(r)`` minus crash-faulted secondaries.
+
+        Mains stay even when crashed — the comms bus survives a payload
+        computer crash, so a crashed main still relays/merges/feeds; the
+        engines skip only its own ``main_trains`` step. This is THE group
+        view both engines must iterate when a fault plane is active (the
+        compiled EdgeSchedule stages were built from it)."""
+        g = self.groups(r)
+        f = self.faults
+        if f is None or not f.crash[r].any():
+            return g
+        return {m: [s for s in secs if not f.crash[r, s]]
+                for m, secs in g.items()}
+
+    def live_sats(self, r: int) -> list[int]:
+        """All non-crashed satellites at round r (the qfl sender set)."""
+        f = self.faults
+        return [s for s in range(self.n_sats)
+                if f is None or not f.crash[r, s]]
+
     def unreachable(self, r: int) -> list[int]:
         return [int(s) for s in np.where(self.assignment[r] < 0)[0]]
 
@@ -194,6 +328,15 @@ class RoundPlan:
         return (jnp.asarray(self.part_mask[r], jnp.float32),
                 jnp.asarray(self.seeds[r], jnp.uint32),
                 jnp.asarray(self.weights, jnp.float32))
+
+    def fault_mask(self, r: int):
+        """(N,) float32 health vector for ``round_fn`` — 1 = healthy,
+        0 = crash-faulted this round. All-ones when no fault plane is
+        compiled, so callers can pass it unconditionally."""
+        if self.faults is None:
+            return jnp.ones((self.n_sats,), jnp.float32)
+        return jnp.asarray(1.0 - self.faults.crash[r].astype(np.float32),
+                           jnp.float32)
 
 
 def _nearest_primary_assignment(pos, isl, prim):
@@ -266,8 +409,16 @@ def _groups_of(assignment_r: np.ndarray, prim_r: np.ndarray):
     return out
 
 
+def _live_groups_of(groups: dict, crash_r) -> dict:
+    """Drop crash-faulted secondaries (mirrors ``RoundPlan.live_groups``)."""
+    if crash_r is None or not crash_r.any():
+        return groups
+    return {m: [s for s in secs if not crash_r[s]]
+            for m, secs in groups.items()}
+
+
 def _round_stages(fl: SatQFLConfig, assignment_r, prim_r, waits_r, n_sats,
-                  arrivals_r=None):
+                  arrivals_r=None, crash_r=None):
     """Edge list of each dispatch stage of one round, in execution order.
 
     Each edge is (src, dst, link, conc, born) with dst = GROUND for the
@@ -276,21 +427,27 @@ def _round_stages(fl: SatQFLConfig, assignment_r, prim_r, waits_r, n_sats,
     walk a round: qfl = one feeder stage; sim = ISL uplinks then feeder;
     async = the staleness schedule's compiled ARRIVALS (updates whose
     window has opened by this round, possibly born rounds earlier) then
-    feeder; seq = one stage per chain hop, then feeder.
+    feeder; seq = one stage per chain hop, then feeder. Crash-faulted
+    satellites send nothing, so their edges never enter a stage (a
+    crashed main keeps its feeder — the comms bus survives).
     """
     def now(edges):
         return [(a, b, lk, c, -1) for (a, b, lk, c) in edges]
 
+    def live(s):
+        return crash_r is None or not crash_r[s]
+
     if fl.mode == "qfl":
-        return [now([(s, GROUND, 1, 1) for s in range(n_sats)])]
-    groups = _groups_of(assignment_r, prim_r)
+        return [now([(s, GROUND, 1, 1) for s in range(n_sats) if live(s)])]
+    groups = _live_groups_of(_groups_of(assignment_r, prim_r), crash_r)
     mains = list(groups)
     stages = []
     if fl.mode == "sim":
         stages.append(now([(s, m, 0, max(len(groups[m]), 1))
                            for m in mains for s in groups[m]]))
     elif fl.mode == "async":
-        stages.append([(s, m, 0, 1, b) for (s, m, b) in (arrivals_r or [])])
+        stages.append([(s, m, 0, 1, b)
+                       for (s, m, b, _k) in (arrivals_r or [])])
     elif fl.mode == "seq":
         chains = [groups[m] for m in mains]
         for hop in range(max((len(c) for c in chains), default=0)):
@@ -304,11 +461,12 @@ def _round_stages(fl: SatQFLConfig, assignment_r, prim_r, waits_r, n_sats,
 
 def _edge_schedule(fl: SatQFLConfig, assignment, prim, waits,
                    keymgr: KeyManager | None,
-                   arrivals=None) -> EdgeSchedule:
+                   arrivals=None, crash=None) -> EdgeSchedule:
     """Compile the per-round secure-exchange plane (see EdgeSchedule)."""
     R, N = assignment.shape
     per_round = [_round_stages(fl, assignment[r], prim[r], waits[r], N,
-                               arrivals[r] if arrivals is not None else None)
+                               arrivals[r] if arrivals is not None else None,
+                               crash[r] if crash is not None else None)
                  for r in range(R)]
     S_max = max(len(st) for st in per_round)
     E_max = max(max((sum(len(s) for s in st) for st in per_round)), 1)
@@ -369,7 +527,7 @@ def _edge_schedule(fl: SatQFLConfig, assignment, prim, waits,
 
 
 def _async_send_schedule(fl: SatQFLConfig, assignment, prim,
-                         trace: ConstellationTrace, t_idx):
+                         trace: ConstellationTrace, t_idx, crash=None):
     """Phase A of the staleness compiler: pure-topology send/arrival plan.
 
     A secondary trains DURING its round's access window, so the finished
@@ -382,59 +540,129 @@ def _async_send_schedule(fl: SatQFLConfig, assignment, prim,
     so asynchronous updates always merge with staleness ≥ 1, the classic
     async-FL regime the bounded buffer exists for.
 
+    With a fault plane active (``fl.link_flap_rate > 0``), each
+    transmission attempt may FLAP — drop before the payload moves. A
+    flapped delivery re-enters the schedule with bounded exponential
+    backoff: retransmission ``k`` searches for the next reopened ISL
+    step at or past ``fail_step + retry_backoff_steps · 2^min(k−1, 6)``,
+    up to ``max_retries`` attempts, still subject to the Δ_max staleness
+    bound and the trace/round horizon — after which the update is
+    counted LOST. The whole retry history is resolved here, so the
+    arrival schedule contains only surviving attempts (their attempt
+    index rides along for the recovery ledger) and both engines replay
+    identical outcomes.
+
     Returns (delay_rounds, deliver_round, tx_wait_s, arrivals,
-    groups_per_round); ``arrivals[r]`` lists (sat, dest main, born) in
-    canonical delivery order — born ascending, then the born round's
-    group iteration order — which is exactly the order the per-main-list
-    oracle's outbox drains.
+    groups_per_round, fault_info); ``arrivals[r]`` lists (sat, dest
+    main, born, attempt) in canonical delivery order — born ascending,
+    then the born round's group iteration order — which is exactly the
+    order the per-main-list oracle's outbox drains. ``fault_info`` is
+    the retransmit ledger (per-round flap/retry/lost/recovered event
+    counts + per-(born, sat) flags), None when no flap rate is set.
     """
     R, N = assignment.shape
     t_idx = np.asarray(t_idx, np.int64)
     step = (float(trace.times_s[1] - trace.times_s[0])
             if trace.n_steps > 1 else 0.0)
-    groups_r = [_groups_of(assignment[r], prim[r]) for r in range(R)]
+    groups_r = [_live_groups_of(_groups_of(assignment[r], prim[r]),
+                                crash[r] if crash is not None else None)
+                for r in range(R)]
     has_mains = [len(g) > 0 for g in groups_r]
     delay = np.full((R, N), -1, np.int64)
     deliver = np.full((R, N), -1, np.int64)
     tx_wait = np.full((R, N), np.inf)
+    flap_on = fl.link_flap_rate > 0
+    fs_seed = fl.fault_seed & 0xFFFFFFFF
+    flap_events = np.zeros((R,), np.int32)
+    retry_events = np.zeros((R,), np.int32)
+    lost_events = np.zeros((R,), np.int32)
+    recovered_events = np.zeros((R,), np.int32)
+    attempt_of = np.zeros((R, N), np.int32)
+    recovered = np.zeros((R, N), bool)
     for b in range(R):
         t = int(t_idx[b])
         for m, secs in groups_r[b].items():
             for s in secs:
-                hits = np.where(trace.ss_access[s, m, t + 1:])[0]
-                if len(hits) == 0:
-                    continue                # window never reopens: dropped
-                k_tx = t + 1 + int(hits[0])
-                tx_wait[b, s] = (k_tx - t) * step
-                ks = np.where(t_idx[b:] >= k_tx)[0]
-                if len(ks) == 0:
-                    continue                # opens past the round horizon
-                delay[b, s] = int(ks[0])
-                rd = next((k for k in range(b + int(ks[0]), R)
-                           if has_mains[k]), None)
-                if rd is None or rd - b > fl.max_staleness:
-                    continue
-                deliver[b, s] = rd
+                attempt = 0
+                k_from = t + 1       # first step a transmission may use
+                fail_rd = -1         # round of the last failed attempt
+                while True:
+                    hits = np.where(trace.ss_access[s, m, k_from:])[0]
+                    if len(hits) == 0:
+                        # window never reopens inside the trace: a plain
+                        # drop on attempt 0, a fault-caused loss later
+                        if attempt > 0:
+                            lost_events[fail_rd] += 1
+                        break
+                    k_tx = k_from + int(hits[0])
+                    if attempt == 0:
+                        tx_wait[b, s] = (k_tx - t) * step
+                    ks = np.where(t_idx[b:] >= k_tx)[0]
+                    if len(ks) == 0:
+                        if attempt > 0:
+                            lost_events[fail_rd] += 1
+                        break               # opens past the round horizon
+                    if attempt == 0:
+                        delay[b, s] = int(ks[0])
+                    rd = next((k for k in range(b + int(ks[0]), R)
+                               if has_mains[k]), None)
+                    if rd is None or rd - b > fl.max_staleness:
+                        if attempt > 0:
+                            lost_events[fail_rd] += 1
+                        break               # too stale to bother
+                    if flap_on and _fault_hit(
+                            fault_site_u32(fs_seed, "flap", b,
+                                           min(s, m), max(s, m), attempt),
+                            fl.link_flap_rate):
+                        # the transmission at k_tx drops; the event is
+                        # charged to the round that would have received it
+                        flap_events[rd] += 1
+                        fail_rd = rd
+                        if attempt >= fl.max_retries:
+                            lost_events[rd] += 1
+                            break           # retry budget exhausted: lost
+                        retry_events[rd] += 1
+                        k_from = k_tx + fl.retry_backoff_steps * (
+                            2 ** min(attempt, 6))
+                        attempt += 1
+                        continue
+                    deliver[b, s] = rd
+                    attempt_of[b, s] = attempt
+                    if attempt > 0:
+                        recovered[b, s] = True
+                        recovered_events[rd] += 1
+                    break
     arrivals = [[] for _ in range(R)]
     for b in range(R):
         for m, secs in groups_r[b].items():
             for s in secs:
                 if deliver[b, s] >= 0:
-                    arrivals[int(deliver[b, s])].append((int(s), int(m), b))
-    return delay, deliver, tx_wait, arrivals, groups_r
+                    arrivals[int(deliver[b, s])].append(
+                        (int(s), int(m), b, int(attempt_of[b, s])))
+    fault_info = None
+    if flap_on:
+        fault_info = {"flap_events": flap_events,
+                      "retry_events": retry_events,
+                      "lost_events": lost_events,
+                      "recovered_events": recovered_events,
+                      "attempt_of": attempt_of, "recovered": recovered}
+    return delay, deliver, tx_wait, arrivals, groups_r, fault_info
 
 
 def _staleness_schedule(fl: SatQFLConfig, delay, deliver, tx_wait, arrivals,
                         groups_r, weights, es: EdgeSchedule,
-                        keymgr: KeyManager | None) -> StalenessSchedule:
+                        keymgr: KeyManager | None,
+                        faults: FaultSchedule | None = None
+                        ) -> StalenessSchedule:
     """Phase B: simulate the buffer lifecycle into dense merge arrays.
 
     Runs the same pending-queue mechanics the per-main-list oracle runs
     live — arrivals append (minus QBER-aborted edges when key material
-    exists and the policy is to drop them), each current main merges its
-    fresh entries and discards stale ones — and records the outcome as
-    ring-frame masks. The secagg pass additionally deals pairwise mask
-    shares per born-round cohort and compiles the per-merge signed
+    exists and the policy is to drop them, and minus tamper-faulted
+    deliveries whose MAC the receiver rejects), each current main merges
+    its fresh entries and discards stale ones — and records the outcome
+    as ring-frame masks. The secagg pass additionally deals pairwise
+    mask shares per born-round cohort and compiles the per-merge signed
     correction streams for absent partners.
     """
     R, N = delay.shape
@@ -446,10 +674,20 @@ def _staleness_schedule(fl: SatQFLConfig, delay, deliver, tx_wait, arrivals,
     aborted = {}
     if es.with_keys and fl.security != "none" and keymgr is not None:
         for r in range(R):
-            for (s, m, b) in arrivals[r]:
+            for (s, m, b, _k) in arrivals[r]:
                 e = canonical_edge((s, m))
                 if e not in aborted:
                     aborted[e] = keymgr.get(e).compromised
+
+    # tamper-faulted deliveries fail the receiver's MAC and never enter
+    # the buffer — keyed by BORN round, so two in-flight updates on the
+    # same edge fault independently (matches the pad fold-in convention)
+    tampered: set = set()
+    if faults is not None and faults.corrupt_rate > 0:
+        for r in range(R):
+            for (s, m, b, _k) in arrivals[r]:
+                if faults.tamper_of(b, (s, m)):
+                    tampered.add((s, m, b))
 
     main_ids = np.full((R, G), -1, np.int64)
     send_slot = np.full((R, N), -1, np.int64)
@@ -494,9 +732,11 @@ def _staleness_schedule(fl: SatQFLConfig, delay, deliver, tx_wait, arrivals,
     for r in range(R):
         mains = list(groups_r[r])
         main_ids[r, :len(mains)] = mains
-        for (s, m, b) in arrivals[r]:
+        for (s, m, b, _k) in arrivals[r]:
             if aborted.get(canonical_edge((s, m)), False):
                 continue                    # QBER abort: update dropped
+            if (s, m, b) in tampered:
+                continue                    # MAC-rejected on arrival
             pending.setdefault(m, []).append((s, b))
         for g, m in enumerate(mains):
             q = pending.get(m, [])
@@ -561,6 +801,88 @@ def _staleness_schedule(fl: SatQFLConfig, delay, deliver, tx_wait, arrivals,
         sum_wq=sum_wq, corr_seed=corr_seed, corr_sign=corr_sign)
 
 
+def _fault_masks(fl: SatQFLConfig, R: int, N: int):
+    """(crash, straggler) (R, N) bool masks from the fault-site hash.
+
+    A crashed satellite cannot *also* be a straggler that round — it is
+    not transmitting at all — so the straggler mask excludes crashes.
+    """
+    crash = np.zeros((R, N), bool)
+    strag = np.zeros((R, N), bool)
+    if fl.crash_rate <= 0 and fl.straggler_rate <= 0:
+        return crash, strag
+    fs_seed = fl.fault_seed & 0xFFFFFFFF
+    for r in range(R):
+        for s in range(N):
+            if fl.crash_rate > 0:
+                crash[r, s] = _fault_hit(
+                    fault_site_u32(fs_seed, "crash", r, s), fl.crash_rate)
+            if fl.straggler_rate > 0:
+                strag[r, s] = _fault_hit(
+                    fault_site_u32(fs_seed, "strag", r, s),
+                    fl.straggler_rate)
+    strag &= ~crash
+    return crash, strag
+
+
+def _compile_faults(fl: SatQFLConfig, es: EdgeSchedule, crash, strag,
+                    fault_info, n_sats: int) -> FaultSchedule | None:
+    """Tabulate the fault-site hash over the compiled EdgeSchedule.
+
+    Returns None when every fault rate is 0 — the plan then carries no
+    fault plane at all and both engines run their pre-fault code paths
+    bit-identically. Async ISL arrival slots are never flap-masked here
+    (their flap/retry history was resolved by the retransmit simulation
+    in ``_async_send_schedule``); instead they carry the surviving
+    delivery's attempt index — ledger bookkeeping only. The pad seed
+    stays a function of (edge, born): flapped attempts drop the link
+    BEFORE ciphertext moves, so the surviving attempt is that pad's
+    first and only wire exposure (no pad reuse, no re-keying needed).
+    """
+    if (fl.link_flap_rate <= 0 and fl.crash_rate <= 0
+            and fl.straggler_rate <= 0 and fl.corrupt_rate <= 0):
+        return None
+    R, E_max = es.src.shape
+    fs_seed = fl.fault_seed & 0xFFFFFFFF
+    link_flap = np.zeros((R, E_max), bool)
+    tamper = np.zeros((R, E_max), np.uint32)
+    attempt = np.zeros((R, E_max), np.int32)
+    for r in range(R):
+        for j in range(int(es.ptr[r, -1])):
+            b = int(es.born[r, j])
+            d = int(es.dst[r, j])
+            a, bb = _edge_ids((int(es.src[r, j]),
+                               "gs" if d == GROUND else d), n_sats)
+            is_arrival = fl.mode == "async" and int(es.link[r, j]) == 0
+            if is_arrival and fault_info is not None:
+                attempt[r, j] = int(
+                    fault_info["attempt_of"][b, int(es.src[r, j])])
+            if fl.link_flap_rate > 0 and not is_arrival:
+                link_flap[r, j] = _fault_hit(
+                    fault_site_u32(fs_seed, "flap", b, a, bb),
+                    fl.link_flap_rate)
+            if fl.corrupt_rate > 0:
+                u = fault_site_u32(fs_seed, "tamper", b, a, bb)
+                if _fault_hit(u, fl.corrupt_rate):
+                    tamper[r, j] = np.uint32(u) | np.uint32(1)
+    zR = np.zeros((R,), np.int32)
+    fi = fault_info or {}
+    return FaultSchedule(
+        seed=fs_seed, n_sats=n_sats,
+        link_flap_rate=fl.link_flap_rate, crash_rate=fl.crash_rate,
+        straggler_rate=fl.straggler_rate, corrupt_rate=fl.corrupt_rate,
+        straggler_extra_s=fl.straggler_extra_s,
+        max_retries=fl.max_retries,
+        retry_backoff_steps=fl.retry_backoff_steps,
+        crash=crash, straggler=strag, link_flap=link_flap, tamper=tamper,
+        attempt=attempt,
+        flap_events=fi.get("flap_events", zR),
+        retry_events=fi.get("retry_events", zR),
+        lost_events=fi.get("lost_events", zR),
+        recovered_events=fi.get("recovered_events", zR),
+        recovered=fi.get("recovered", np.zeros((R, n_sats), bool)))
+
+
 def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
                        sample_counts=None, keymgr: KeyManager | None = None,
                        round_stride: int | None = None,
@@ -615,18 +937,27 @@ def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
     else:
         weights = np.ones((N,), np.float32)
 
+    # fault plane: crash/straggler masks are drawn before any schedule
+    # so crashed satellites never enter a dispatch stage at all
+    crash, strag = _fault_masks(fl, R, N)
+    crash_arg = crash if crash.any() else None
+
     # async v2: compile the bounded-staleness send/arrival plan first —
     # the edge schedule's async uplink stage IS the arrival schedule
-    arrivals = stale = None
+    arrivals = stale = fault_info = None
     if fl.mode == "async":
-        delay, deliver, tx_wait, arrivals, groups_r = _async_send_schedule(
-            fl, assignment, prim, trace, t_idx)
+        (delay, deliver, tx_wait, arrivals, groups_r,
+         fault_info) = _async_send_schedule(fl, assignment, prim, trace,
+                                            t_idx, crash_arg)
     # the secure-exchange plane: key material rides along whenever a key
     # registry exists (callers running security="none" pass neither)
-    edges = _edge_schedule(fl, assignment, prim, waits, keymgr, arrivals)
+    edges = _edge_schedule(fl, assignment, prim, waits, keymgr, arrivals,
+                           crash_arg)
+    faults = _compile_faults(fl, edges, crash, strag, fault_info, N)
     if fl.mode == "async":
         stale = _staleness_schedule(fl, delay, deliver, tx_wait, arrivals,
-                                    groups_r, weights, edges, keymgr)
+                                    groups_r, weights, edges, keymgr,
+                                    faults)
 
     return RoundPlan(
         n_rounds=R, n_sats=N,
@@ -643,4 +974,5 @@ def compile_round_plan(trace: ConstellationTrace, fl: SatQFLConfig, *,
         weights=weights,
         edges=edges,
         stale=stale,
+        faults=faults,
     )

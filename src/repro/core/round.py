@@ -68,7 +68,7 @@ exactly equal, and QBER aborts / MAC failures surface per edge
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 
 import jax
 import jax.numpy as jnp
@@ -84,7 +84,9 @@ from repro.core.localtrain import (
 from repro.core.plan import RoundPlan, compile_round_plan
 from repro.nn.optim import get_optimizer, inv_sqrt_schedule, constant_schedule
 from repro.nn.pytree import tree_bytes, tree_weighted_sum
-from repro.security.errors import SecurityError
+from repro.security.errors import (CorruptionError, LinkFlapError,
+                                   RetryExhaustedError, SatCrashError,
+                                   SecurityError)
 from repro.security.fernet_lite import TOKEN_OVERHEAD
 from repro.security.keys import KeyManager, canonical_edge
 from repro.security.mac import (mac_verify, mac_verify_rows, poly_mac_rows,
@@ -124,6 +126,22 @@ def evaluate(api, model_cfg, params, batch) -> tuple[float, float]:
 
 def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+@dataclass
+class FaultReport:
+    """Per-round ledger of the injected-fault plane (plan-derived, so the
+    per-client oracle and the batched executor report IDENTICAL counts by
+    construction; the parity suites verify the engines' *behavior* —
+    drops, merges, accounting — matches these numbers site for site)."""
+    round: int
+    crashes: int = 0        # satellites whose payload computer was down
+    stragglers: int = 0     # satellites paying straggler_extra_s
+    link_flaps: int = 0     # transmissions dropped before data moved
+    corruptions: int = 0    # payloads MAC-rejected at the receiver
+    retries: int = 0        # async retransmissions launched
+    lost: int = 0           # async updates lost after max_retries
+    recovered: int = 0      # async deliveries that needed ≥ 1 retry
 
 
 @dataclass
@@ -223,6 +241,7 @@ class SatQFLTrainer:
         self.async_merge_log: list = []
         self.log = CommLog()
         self.history: list[RoundMetrics] = []
+        self.fault_reports: list[FaultReport] = []
         # the edge-batched secure plane covers the OTP(+MAC) modes; the
         # per-edge loop stays as the numerics/accounting oracle
         self.edge_batched = (edge_batched
@@ -408,16 +427,90 @@ class SatQFLTrainer:
         return jax.vmap(one)(data, n)
 
     # ------------------------------------------------------------------
+    # fault plane (seeded FaultSchedule riding on the compiled plan)
+    # ------------------------------------------------------------------
+    def _crashed(self, r: int, s: int) -> bool:
+        f = self.plan.faults
+        return f is not None and bool(f.crash[r, s])
+
+    def _strag_extra(self, r: int, s: int) -> float:
+        """Straggler wall-clock penalty of sender ``s`` at round ``r`` —
+        added wherever that sender's transfer wall (or async transmit
+        wait) is recorded, delivered or not, on BOTH execution paths."""
+        f = self.plan.faults
+        return f.straggler_extra(r, s) if f is not None else 0.0
+
+    def _fault_report_for(self, r: int) -> FaultReport:
+        """Tabulate the round's fault ledger from the compiled schedule."""
+        f, es = self.plan.faults, self.plan.edges
+        n_e = int(es.ptr[r, -1])
+        corruptions = 0
+        for j in range(n_e):
+            # a tampered slot only *detects* when data actually moved —
+            # QBER-aborted or flapped slots never reach the receiver MAC
+            if (f.tamper[r, j] and not f.link_flap[r, j]
+                    and not es.abort[r, j]):
+                corruptions += 1
+        return FaultReport(
+            round=r,
+            crashes=int(f.crash[r].sum()),
+            stragglers=int(f.straggler[r].sum()),
+            link_flaps=int(f.link_flap[r, :n_e].sum())
+            + int(f.flap_events[r]),
+            corruptions=corruptions,
+            retries=int(f.retry_events[r]),
+            lost=int(f.lost_events[r]),
+            recovered=int(f.recovered_events[r]))
+
+    def _raise_round_faults(self, r: int):
+        """``on_fault='raise'``: surface the round's first fault as its
+        typed error BEFORE the engines degrade — precedence crash >
+        retry-exhaustion > link flap > corruption (worst loss first)."""
+        f, es = self.plan.faults, self.plan.edges
+        if f.crash[r].any():
+            sites = [(r, int(s)) for s in np.where(f.crash[r])[0]]
+            raise SatCrashError(
+                f"satellite crash(es) at round {r}: {sites}", sites=sites)
+        if int(f.lost_events[r]) > 0:
+            raise RetryExhaustedError(
+                f"{int(f.lost_events[r])} async update(s) lost at round "
+                f"{r} after {self.fl.max_retries} retransmission(s)",
+                sites=[(r, "async")])
+        n_e = int(es.ptr[r, -1])
+        flaps = [(int(es.born[r, j]), es.edge_tuple(r, j))
+                 for j in range(n_e) if f.link_flap[r, j]]
+        if flaps or int(f.flap_events[r]) > 0:
+            raise LinkFlapError(
+                f"link flap(s) at round {r}: {flaps or 'async transmit'}",
+                sites=[(r, e) for _, e in flaps] or [(r, "async")])
+        tampers = [(r, es.edge_tuple(r, j)) for j in range(n_e)
+                   if (f.tamper[r, j] and not f.link_flap[r, j]
+                       and not es.abort[r, j])]
+        if tampers:
+            raise CorruptionError(
+                f"payload corruption at round {r}: MAC rejected "
+                f"{[e for _, e in tampers]}", sites=tampers)
+
+    # ------------------------------------------------------------------
     # secure exchange (Algorithm 2) — returns params as seen by receiver
     # ------------------------------------------------------------------
     def _exchange(self, params, edge: tuple, round_idx: int, link: str,
                   concurrent: int = 1):
         """Per-edge Algorithm 2 — the numerics/accounting oracle for the
         edge-batched plane. Returns (params_as_received, wall_s); params
-        is None when the edge QBER-aborted under on_qber_abort='drop'."""
+        is None when the edge QBER-aborted under on_qber_abort='drop', or
+        when an injected fault (link flap / payload tamper) dropped it."""
         fl = self.fl
+        fs = self.plan.faults
+        # async ISL arrivals are never flapped live: their flap/retry
+        # history was resolved by the plan's retransmit simulation
+        flapped = (fs is not None
+                   and not (fl.mode == "async" and link == "isl")
+                   and fs.flap_of(round_idx, edge))
         nbytes = tree_bytes(params)
         if fl.security == "none":
+            if flapped:
+                return None, 0.0    # link dropped before any data moved
             t = (self.comm.isl_transfer(nbytes, concurrent) if link == "isl"
                  else self.comm.feeder_transfer(nbytes, concurrent))
             self.log.count_transfer(nbytes)   # wall time recorded per round
@@ -438,6 +531,9 @@ class SatQFLTrainer:
                 raise SecurityError(f"QBER abort on edge {ek.edge}",
                                     edges=[ek.edge])
             return None, t                    # drop: sat leaves C(t)
+        if flapped:
+            # establishment (when due) was paid; the payload never moved
+            return None, t
 
         t += (self.comm.isl_transfer(nbytes, concurrent) if link == "isl"
               else self.comm.feeder_transfer(nbytes, concurrent))
@@ -446,11 +542,19 @@ class SatQFLTrainer:
         if fl.security in ("qkd", "qkd_fernet"):
             seed = ek.round_seed(round_idx)
             ct = encrypt_tree(params, seed)
+            tv = fs.tamper_of(round_idx, edge) if fs is not None else 0
             if fl.verify_mac:
                 r, s = ek.mac_keys(round_idx)
                 stream = tree_to_u32(ct)
                 tag = poly_mac_u32(stream, r, s)
-                if not bool(mac_verify(stream, tag, r, s)):
+                # receiver-side recompute over the RECEIVED words — an
+                # injected tamper flips the first wire word, so the MAC
+                # genuinely rejects it (drop decisions stay driven by the
+                # compiled schedule: a ~2^-31 tag collision changes
+                # nothing)
+                rx = (stream.at[0].set(stream[0] ^ jnp.uint32(tv))
+                      if tv else stream)
+                if not bool(mac_verify(rx, tag, r, s)) and not tv:
                     raise SecurityError(f"MAC mismatch on edge {ek.edge}",
                                         edges=[ek.edge])
             tc = 2 * self.comm.crypto_time(nbytes)
@@ -469,6 +573,10 @@ class SatQFLTrainer:
                 tc += 2 * self.comm.crypto_time(len(tok))
             self.log.add_security(tc)
             t += tc
+            if tv:
+                # corruption detected AFTER transfer + crypto were paid:
+                # the receiver discards the payload (per-mode degradation)
+                return None, t
             return decrypt_tree(ct, seed), t
 
         if fl.security == "teleport":
@@ -487,17 +595,22 @@ class SatQFLTrainer:
             return params, t
         raise ValueError(fl.security)
 
-    def _secure_stage_impl(self, stacked, seeds, mac_r, mac_s):
+    def _secure_stage_impl(self, stacked, seeds, mac_r, mac_s, tamper):
         """ONE edge-batched Algorithm-2 dispatch over the dispatch frame:
         per-row pad expansion + OTP-XOR (encrypt), stacked wire streams,
         batched MAC tag + verify, decrypt. Rows without an edge carry seed
-        0 and pass through bit-identically (XOR is an involution)."""
+        0 and pass through bit-identically (XOR is an involution).
+        ``tamper`` holds the fault plane's injected wire-corruption word
+        per row (0 = clean): it flips the first RECEIVED word before the
+        receiver's MAC recompute, so tampered rows genuinely fail
+        verification in-dispatch."""
         ct = encrypt_tree_rows(stacked, seeds)
         if self.fl.verify_mac:
             streams = tree_to_u32_rows(ct)
             tags = poly_mac_rows(streams, mac_r, mac_s)
             # receiver-side recompute over the received streams
-            ok = _mac_rows_verify(streams, tags, mac_r, mac_s)
+            rx = streams.at[:, 0].set(streams[:, 0] ^ tamper)
+            ok = _mac_rows_verify(rx, tags, mac_r, mac_s)
         else:
             ok = jnp.ones((seeds.shape[0],), bool)
         return decrypt_tree_rows(ct, seeds), ok
@@ -515,11 +628,12 @@ class SatQFLTrainer:
         """
         fl = self.fl
         es = self.plan.edges
+        fs = self.plan.faults
         lo, hi = es.stage_bounds(r, stage)
         assert hi - lo == len(edges), (r, stage, hi - lo, len(edges))
         nbytes = self._row_nbytes
         tq = self.comm.qkd_time(fl.qkd_bits)
-        walls, delivered, fern = [], [], []
+        walls, delivered, tampv, fern = [], [], [], []
         for j, edge in enumerate(edges):
             e = es.edge_tuple(r, lo + j)
             # link/concurrency/born come from the compiled schedule; the
@@ -541,6 +655,14 @@ class SatQFLTrainer:
                     raise SecurityError(f"QBER abort on edge {e}", edges=[e])
                 walls.append(t)
                 delivered.append(False)
+                tampv.append(0)
+                continue
+            if fs is not None and fs.link_flap[r, lo + j]:
+                # injected flap: establishment (when due) was paid, the
+                # payload never moved — the row drops like a QBER abort
+                walls.append(t)
+                delivered.append(False)
+                tampv.append(0)
                 continue
             t += (self.comm.isl_transfer(nbytes, c) if link == "isl"
                   else self.comm.feeder_transfer(nbytes, c))
@@ -556,7 +678,11 @@ class SatQFLTrainer:
             self.log.add_security(tc)
             t += tc
             walls.append(t)
-            delivered.append(True)
+            # injected tamper: transfer + crypto were paid, then the
+            # receiver's MAC rejects the payload — the row is dropped
+            tv = int(fs.tamper[r, lo + j]) if fs is not None else 0
+            tampv.append(tv)
+            delivered.append(tv == 0)
 
         if fern:
             from repro.security.fernet_lite import (InvalidToken,
@@ -581,6 +707,7 @@ class SatQFLTrainer:
         seeds = np.zeros((K,), np.uint32)
         mr = np.zeros((K,), np.uint32)
         ms = np.zeros((K,), np.uint32)
+        tam = np.zeros((K,), np.uint32)
         live_rows = []
         for j, row in enumerate(rows):
             if delivered[j]:
@@ -588,8 +715,18 @@ class SatQFLTrainer:
                 mr[row] = es.mac_r[r, lo + j]
                 ms[row] = es.mac_s[r, lo + j]
                 live_rows.append((row, edges[j]))
+            elif tampv[j]:
+                # tampered rows ride the dispatch with their real keys +
+                # the injected wire-corruption word, so the batched MAC
+                # rejects them in-graph; they stay out of live_rows (the
+                # schedule, not the ~2^-31-collision tag, decides drops)
+                seeds[row] = es.seed[r, lo + j]
+                mr[row] = es.mac_r[r, lo + j]
+                ms[row] = es.mac_s[r, lo + j]
+                tam[row] = tampv[j]
         out, ok = self._jit_secure(stacked, jnp.asarray(seeds),
-                                   jnp.asarray(mr), jnp.asarray(ms))
+                                   jnp.asarray(mr), jnp.asarray(ms),
+                                   jnp.asarray(tam))
         if fl.verify_mac and live_rows:
             ok = np.asarray(ok)
             bad = [canonical_edge(e) for row, e in live_rows if not ok[row]]
@@ -620,13 +757,25 @@ class SatQFLTrainer:
         conc = concurrents or [1] * k
         walls = []
         if self.fl.security == "none":
-            for c in conc:
+            fs = self.plan.faults
+            flap = [False] * k
+            if fs is not None and fs.link_flap_rate > 0:
+                lo, _ = self.plan.edges.stage_bounds(r, stage)
+                flap = [bool(fs.link_flap[r, lo + j]) for j in range(k)]
+            delivered = []
+            for j, c in enumerate(conc):
+                if flap[j]:
+                    # link dropped before any data moved: nothing counted
+                    walls.append(0.0)
+                    delivered.append(False)
+                    continue
                 t = (self.comm.isl_transfer(self._row_nbytes, c)
                      if link == "isl"
                      else self.comm.feeder_transfer(self._row_nbytes, c))
                 self.log.count_transfer(self._row_nbytes)
                 walls.append(t)
-            return stacked, walls, [True] * k
+                delivered.append(True)
+            return stacked, walls, delivered
         if self.edge_batched:
             return self._exchange_rows_batched(stacked, rows, edges, r,
                                                stage, link, conc, borns)
@@ -682,9 +831,9 @@ class SatQFLTrainer:
             prev = theta
             theta, _ = self._train_sat(s, theta, r)
             theta, t = self._exchange(theta, (s, main), r, "isl")
-            chain_wall += t
+            chain_wall += t + self._strag_extra(r, s)
             if theta is None:
-                theta = prev        # hop QBER-aborted: chain reverts
+                theta = prev    # hop QBER-aborted/faulted: chain reverts
             else:
                 delivered += 1
         return theta, chain_wall, 0.0, delivered
@@ -697,9 +846,9 @@ class SatQFLTrainer:
             p, _ = self._train_sat(s, self.global_params, r)
             p, t = self._exchange(p, (s, main), r, "isl",
                                   concurrent=max(len(secs), 1))
-            up_walls.append(t)
+            up_walls.append(t + self._strag_extra(r, s))
             if p is None:
-                continue            # QBER abort: update dropped
+                continue            # QBER abort / injected fault: dropped
             collected.append(p)
             ws.append(self._weight_of(s))
         merged = (self._aggregate(collected, ws) if collected
@@ -720,7 +869,9 @@ class SatQFLTrainer:
         inset = {(s, b) for _, s, b in fresh}
         pairs, borns, signs = [], [], []
         for _, s, b in fresh:
-            for s2 in self.plan.groups(b)[m]:
+            # the cohort is the born round's LIVE group — the compiled
+            # pairwise-mask schedule was dealt over it
+            for s2 in self.plan.live_groups(b)[m]:
                 if s2 == s or (s2, b) in inset:
                     continue            # partner merges here: masks cancel
                 pairs.append(canonical_edge((s, s2)))
@@ -746,7 +897,7 @@ class SatQFLTrainer:
         the cap instead of silently reporting zero.
         """
         fl, st, cap = self.fl, self.plan.stale, self.comm.window_wait_s
-        groups = self.plan.groups(r)
+        groups = self.plan.live_groups(r)
         mains = list(groups)
         state = {"merged": {}, "walls": {}, "waits": {}, "delivered": {}}
         secagg = fl.agg_security == "secagg"
@@ -756,8 +907,10 @@ class SatQFLTrainer:
                 p, _ = self._train_sat(s, self.global_params, r)
                 # every sender's transmit wait counts — a window that
                 # never reopens clamps to the comm model's mean window
-                # wait instead of silently reporting zero
-                gw = max(gw, min(float(st.tx_wait_s[r, s]), cap))
+                # wait instead of silently reporting zero; a straggler
+                # pays its extra on top of the clamp
+                gw = max(gw, min(float(st.tx_wait_s[r, s]), cap)
+                         + self._strag_extra(r, s))
                 rd = int(st.deliver_round[r, s])
                 if rd < 0:
                     continue    # windowless / stale-on-arrival / horizon
@@ -843,7 +996,8 @@ class SatQFLTrainer:
             for s in groups[m]:
                 if delivered[j]:
                     a[g, j] = self._weight_of(s)
-                group_walls[g] = max(group_walls[g], walls[j])
+                group_walls[g] = max(group_walls[g],
+                                     walls[j] + self._strag_extra(r, s))
                 j += 1
         row_sum = a.sum(axis=1, keepdims=True)
         empty = row_sum[:, 0] == 0
@@ -947,7 +1101,8 @@ class SatQFLTrainer:
                 for s in groups[m]:
                     group_waits[g] = max(
                         group_waits[g],
-                        min(float(st.tx_wait_s[r, s]), cap))
+                        min(float(st.tx_wait_s[r, s]), cap)
+                        + self._strag_extra(r, s))
             sats = np.full((self._frame,), N, np.int64)
             slots = np.zeros((self._frame,), np.int64)
             for j, s in enumerate(secs_all):
@@ -1049,25 +1204,34 @@ class SatQFLTrainer:
                 p_new, theta)
             act_rows = [g for g in range(n_chains) if active[g]]
             if self.fl.security == "none":
+                fs = self.plan.faults
+                dropped = []
                 for g in act_rows:
+                    s = chains[g][hop]
+                    chain_walls[g] += self._strag_extra(r, s)
+                    if fs is not None and fs.flap_of(r, (s, mains[g])):
+                        dropped.append(g)   # link flapped: nothing moved
+                        continue
                     chain_walls[g] += self.comm.isl_transfer(self._row_nbytes)
                     self.log.count_transfer(self._row_nbytes)
-                delivered += len(act_rows)
+                    delivered += 1
             else:
                 edges = [(chains[g][hop], mains[g]) for g in act_rows]
                 theta, walls, ok = self._exchange_rows(theta, act_rows,
                                                        edges, r, hop, "isl")
                 for t, g in zip(walls, act_rows):
-                    chain_walls[g] += t
+                    chain_walls[g] += t + self._strag_extra(r,
+                                                            chains[g][hop])
                 dropped = [g for g, d in zip(act_rows, ok) if not d]
-                if dropped:
-                    # hop QBER-aborted: those chains revert to their
-                    # pre-hop state (the trained update never arrived)
-                    idx = jnp.asarray(dropped)
-                    theta = jax.tree_util.tree_map(
-                        lambda full, old: full.at[idx].set(old[idx]),
-                        theta, theta_prev)
                 delivered += int(sum(ok))
+            if dropped:
+                # hop QBER-aborted or fault-dropped: those chains revert
+                # to their pre-hop state (the trained update never
+                # arrived at the next hop)
+                idx = jnp.asarray(dropped)
+                theta = jax.tree_util.tree_map(
+                    lambda full, old: full.at[idx].set(old[idx]),
+                    theta, theta_prev)
         return theta, chain_walls, [0.0], delivered
 
     _BATCHED_SCHEDULERS = {"seq": _merge_seq_batched,
@@ -1081,25 +1245,33 @@ class SatQFLTrainer:
         """Flat FedAvg baseline: every satellite talks to the server over
         its own feeder beam — transfers are PARALLEL (wall = max)."""
         if self.batched:
-            ids = list(range(self.n_sats))
+            ids = self.plan.live_sats(r)        # crashed sats sit out
             npad = self._frame
+            if not ids:
+                self.log.add_wall(0.0)
+                return 0
             p, _ = self._train_group_batched(
                 ids, self._broadcast_global(npad), r)
             p, walls, delivered = self._exchange_rows(
-                p, ids, [("gs", s) for s in ids], r, 0, "feeder")
+                p, list(range(len(ids))), [("gs", s) for s in ids], r, 0,
+                "feeder")
+            walls = [t + self._strag_extra(r, s)
+                     for t, s in zip(walls, ids)]
             self.log.add_wall(2 * max([0.0] + walls))
             w = np.zeros((npad,), np.float32)
-            w[:self.n_sats] = np.where(delivered, self.plan.weights, 0.0)
+            for j, s in enumerate(ids):
+                if delivered[j]:
+                    w[j] = self.plan.weights[s]
             if any(delivered):
                 self.global_params = self._wmean_rows(p, w)
             return int(sum(delivered))
         updates, ws, walls = [], [], [0.0]
-        for s in range(self.n_sats):
+        for s in self.plan.live_sats(r):        # crashed sats sit out
             p, _ = self._train_sat(s, self.global_params, r)
             p, t = self._exchange(p, ("gs", s), r, "feeder")
-            walls.append(t)
+            walls.append(t + self._strag_extra(r, s))
             if p is None:
-                continue                    # QBER abort: update dropped
+                continue            # QBER abort / injected fault: dropped
             updates.append(p)
             ws.append(self._weight_of(s))
         self.log.add_wall(2 * max(walls))   # up + broadcast down
@@ -1128,18 +1300,20 @@ class SatQFLTrainer:
         main_models = [None] * mp
         group_walls, feeder_walls, group_waits = [0.0], [0.0], [0.0]
         participants = 0
-        for g, (main, secs) in enumerate(self.plan.groups(r).items()):
+        for g, (main, secs) in enumerate(self.plan.live_groups(r).items()):
             merged, wall, wait, delivered = merge_group(self, r, main, secs)
             group_walls.append(wall)
             group_waits.append(wait)
             participants += delivered
-            if fl.main_trains:
+            if fl.main_trains and not self._crashed(r, main):
+                # a crashed MAIN still relays/merges/feeds (the comms bus
+                # survives) but its own payload computer skips training
                 merged, _ = self._train_sat(main, merged, r)
                 participants += 1
             merged, t = self._exchange(merged, (main, "gs"), r, "feeder")
-            feeder_walls.append(t)
+            feeder_walls.append(t + self._strag_extra(r, main))
             if merged is None:
-                continue                    # feeder QBER abort: group lost
+                continue        # feeder QBER abort / fault: group lost
             main_models[g] = merged
             main_ws[g] = (self._weight_of(main)
                           + sum(self._weight_of(s) for s in secs))
@@ -1164,7 +1338,7 @@ class SatQFLTrainer:
         axis: secondaries (mode-specific merge), then mains, then one
         weighted reduction for the global model."""
         fl = self.fl
-        groups = self.plan.groups(r)
+        groups = self.plan.live_groups(r)
         mains = list(groups.keys())
         if not mains:
             self.log.add_wait(0.0)
@@ -1174,13 +1348,30 @@ class SatQFLTrainer:
         merged, group_walls, group_waits, participants = \
             self._BATCHED_SCHEDULERS[fl.mode](self, r, mains, groups, mp)
         if fl.main_trains:
-            merged, _ = self._train_group_batched(mains, merged, r,
-                                                  pad_to=mp)
-            participants += len(mains)
+            live_m = [not self._crashed(r, m) for m in mains]
+            if all(live_m):
+                merged, _ = self._train_group_batched(mains, merged, r,
+                                                      pad_to=mp)
+            else:
+                # crashed mains ride the dispatch as masked rows: their
+                # optimizer slots stay untouched and their merged params
+                # pass through untrained (the payload computer is down)
+                p_new, _ = self._train_group_batched(
+                    mains, merged, r, update_opt=live_m, pad_to=mp)
+                keep = jnp.asarray(np.array(
+                    live_m + [False] * (mp - len(mains))))
+                merged = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(
+                        keep.reshape((-1,) + (1,) * (new.ndim - 1)),
+                        new, old),
+                    p_new, merged)
+            participants += int(sum(live_m))
         feeder_stage = int(self.plan.edges.n_stages[r]) - 1
         merged, feeder_walls, fdel = self._exchange_rows(
             merged, list(range(len(mains))), [(m, "gs") for m in mains], r,
             feeder_stage, "feeder")
+        feeder_walls = [t + self._strag_extra(r, m)
+                        for t, m in zip(feeder_walls, mains)]
         # pad rows carry zero weight -> the padded reduction is exact;
         # feeder-aborted mains contribute nothing (their group is lost)
         main_ws = np.zeros((mp,), np.float32)
@@ -1197,6 +1388,166 @@ class SatQFLTrainer:
         return participants
 
     # ------------------------------------------------------------------
+    # round-granularity checkpointing
+    # ------------------------------------------------------------------
+    # Checkpoint = (device pytree, metadata dict). The pytree carries
+    # everything numeric whose bit pattern the resume must reproduce:
+    # global params, the teleport RNG key, optimizer slots, and — for
+    # async — the staleness ring (batched) or the in-flight buffer
+    # payloads (oracle), whose variable-length structure is described by
+    # index lists in the metadata so the load template can be rebuilt.
+    # Everything host-side (CommLog, history, abort/establishment sets)
+    # rides in the metadata. KeyManager state is NOT checkpointed: every
+    # plan edge is established deterministically at compile time from
+    # fl.seed, so reconstruction is exact.
+
+    def _async_payload_like(self):
+        if self.fl.agg_security == "secagg":
+            return {"y": jnp.zeros((self._q_words,), jnp.uint32)}
+        return self.global_params
+
+    def _stack_opt_states(self):
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                      *self.opt_states)
+
+    def _ckpt_state(self):
+        fl = self.fl
+        dev = {"params": self.global_params, "key": self.key,
+               "opt": (self._opt_stacked if self.batched
+                       else self._stack_opt_states())}
+        pending_idx, outbox_idx = [], []
+        if fl.mode == "async":
+            if self.batched:
+                dev["ring"] = self._ring
+                if fl.agg_security == "secagg":
+                    dev["ring_y"] = self._ring_y
+            else:
+                pend, outp = [], []
+                # flatten in dict-insertion + list order; the index lists
+                # let restore rebuild the exact same iteration order (the
+                # buffer merge and OTP establishment accounting depend on it)
+                for mn, lst in self.pending.items():
+                    for (p, s, b) in lst:
+                        pending_idx.append([int(mn), int(s), int(b)])
+                        pend.append(p)
+                for rd, lst in self._outbox.items():
+                    for (s, mn, b, p) in lst:
+                        outbox_idx.append([int(rd), int(s), int(mn), int(b)])
+                        outp.append(p)
+                dev["pending"] = pend
+                dev["outbox"] = outp
+        meta = {
+            "round": len(self.history),
+            "config": asdict(fl),
+            "batched": self.batched,
+            "edge_batched": self.edge_batched,
+            "n_sats": self.n_sats,
+            "log": {
+                "transfer_s": self.log.transfer_s,
+                "wait_s": self.log.wait_s,
+                "security_s": self.log.security_s,
+                "bytes_moved": self.log.bytes_moved,
+                "n_transfers": self.log.n_transfers,
+                "per_round": list(self.log.per_round),
+                "round_details": self.log.round_details,
+            },
+            "history": [asdict(h) for h in self.history],
+            "fault_reports": [asdict(f) for f in self.fault_reports],
+            "aborted_edges": [list(e) for e in self.aborted_edges],
+            "qkd_established": [list(e) for e in self._qkd_established],
+            "pending_idx": pending_idx,
+            "outbox_idx": outbox_idx,
+            "last_fidelity": getattr(self, "_last_fidelity", None),
+        }
+        return dev, meta
+
+    def _ckpt_template(self, meta):
+        fl = self.fl
+        like = {"params": self.global_params, "key": self.key,
+                "opt": (self._opt_stacked if self.batched
+                        else self._stack_opt_states())}
+        if fl.mode == "async":
+            if self.batched:
+                like["ring"] = self._ring
+                if fl.agg_security == "secagg":
+                    like["ring_y"] = self._ring_y
+            else:
+                pl = self._async_payload_like()
+                like["pending"] = [pl] * len(meta["pending_idx"])
+                like["outbox"] = [pl] * len(meta["outbox_idx"])
+        return like
+
+    def save_round_checkpoint(self, directory: str, keep: int = 3) -> str:
+        """Write the full resume state after ``len(self.history)`` rounds."""
+        from repro.checkpoint.io import CheckpointManager
+        dev, meta = self._ckpt_state()
+        return CheckpointManager(directory, keep=keep).save(
+            meta["round"], dev, meta)
+
+    def restore_round_checkpoint(self, directory: str,
+                                 step: int | None = None) -> int:
+        """Restore trainer state; returns the number of completed rounds.
+
+        Resuming from round r and running to the end produces BIT-identical
+        final parameters and communication accounting to the uninterrupted
+        run (the crash-resume parity suite holds this across all four
+        modes and both execution paths)."""
+        from repro.checkpoint.io import load_checkpoint, read_metadata
+        step, meta = read_metadata(directory, step)
+        if meta.get("config") != asdict(self.fl):
+            raise ValueError(
+                "checkpoint was written under a different SatQFLConfig; "
+                "resume with the identical configuration")
+        if (meta.get("batched") != self.batched
+                or meta.get("edge_batched") != self.edge_batched
+                or meta.get("n_sats") != self.n_sats):
+            raise ValueError(
+                "checkpoint execution-path fingerprint (batched/"
+                "edge_batched/n_sats) does not match this trainer")
+        dev, _, meta = load_checkpoint(directory, self._ckpt_template(meta),
+                                       step)
+        fl = self.fl
+        self.global_params = dev["params"]
+        self.key = dev["key"]
+        if self.batched:
+            self._opt_stacked = dev["opt"]
+        else:
+            self.opt_states = [
+                jax.tree_util.tree_map(lambda x, i=i: x[i], dev["opt"])
+                for i in range(self.n_sats)]
+        if fl.mode == "async":
+            if self.batched:
+                self._ring = dev["ring"]
+                if fl.agg_security == "secagg":
+                    self._ring_y = dev["ring_y"]
+            else:
+                self.pending, self._outbox = {}, {}
+                for (mn, s, b), p in zip(meta["pending_idx"],
+                                         dev["pending"]):
+                    self.pending.setdefault(int(mn), []).append(
+                        (p, int(s), int(b)))
+                for (rd, s, mn, b), p in zip(meta["outbox_idx"],
+                                             dev["outbox"]):
+                    self._outbox.setdefault(int(rd), []).append(
+                        (int(s), int(mn), int(b), p))
+        lg = meta["log"]
+        self.log = CommLog(
+            transfer_s=lg["transfer_s"], wait_s=lg["wait_s"],
+            security_s=lg["security_s"], bytes_moved=lg["bytes_moved"],
+            n_transfers=lg["n_transfers"], per_round=list(lg["per_round"]),
+            round_details=[
+                # msgpack flattens tuples to lists; the parity suites
+                # compare details with ==, so restore the cum tuple shape
+                {**d, "cum": tuple(d["cum"])} for d in lg["round_details"]])
+        self.history = [RoundMetrics(**h) for h in meta["history"]]
+        self.fault_reports = [FaultReport(**f) for f in meta["fault_reports"]]
+        self.aborted_edges = {tuple(e) for e in meta["aborted_edges"]}
+        self._qkd_established = {tuple(e) for e in meta["qkd_established"]}
+        if meta.get("last_fidelity") is not None:
+            self._last_fidelity = meta["last_fidelity"]
+        return step
+
+    # ------------------------------------------------------------------
     # one round of Algorithm 1
     # ------------------------------------------------------------------
     def run_round(self, r: int) -> RoundMetrics:
@@ -1205,6 +1556,10 @@ class SatQFLTrainer:
             raise IndexError(
                 f"round {r} beyond the compiled plan ({self.plan.n_rounds} "
                 f"rounds); construct the trainer with fl.n_rounds >= {r + 1}")
+        if fl.on_fault == "raise" and self.plan.faults is not None:
+            # surface the round's injected faults as typed errors BEFORE
+            # the engines degrade (mirrors on_qber_abort='raise')
+            self._raise_round_faults(r)
         m = RoundMetrics(round=r)
         round_t0 = self.log.total_s
         sec_t0 = self.log.security_s
@@ -1220,7 +1575,11 @@ class SatQFLTrainer:
 
         m.comm_s = self.log.total_s - round_t0
         m.security_s = self.log.security_s - sec_t0
-        self.log.close_round()
+        fr = None
+        if self.plan.faults is not None:
+            fr = self._fault_report_for(r)
+            self.fault_reports.append(fr)
+        self.log.close_round(faults=asdict(fr) if fr is not None else None)
         if hasattr(self, "_last_fidelity"):
             m.teleport_fidelity = self._last_fidelity
 
@@ -1244,7 +1603,19 @@ class SatQFLTrainer:
         self.history.append(m)
         return m
 
-    def run(self) -> list[RoundMetrics]:
-        for r in range(self.fl.n_rounds):
+    def run(self, ckpt_dir: str | None = None, ckpt_every: int = 1,
+            ckpt_keep: int = 3) -> list[RoundMetrics]:
+        """Run all rounds; with ``ckpt_dir``, checkpoint every
+        ``ckpt_every`` rounds and auto-resume from the latest step if the
+        directory already holds one (kill-and-restart safe)."""
+        start = 0
+        if ckpt_dir is not None:
+            from repro.checkpoint.io import latest_step
+            if latest_step(ckpt_dir) is not None:
+                start = self.restore_round_checkpoint(ckpt_dir)
+        for r in range(start, self.fl.n_rounds):
             self.run_round(r)
+            if ckpt_dir is not None and (
+                    (r + 1) % ckpt_every == 0 or r + 1 == self.fl.n_rounds):
+                self.save_round_checkpoint(ckpt_dir, keep=ckpt_keep)
         return self.history

@@ -115,13 +115,22 @@ def run_fl_host(args, cfg, api, fl, trace, sats, server):
     tr = SatQFLTrainer(cfg, api, fl, trace, sats, server, batched=batched)
     print(f"[fl] host engine ({'batched' if batched else 'per-client'}) "
           f"mode={fl.mode} security={fl.security} sats={tr.n_sats}")
-    for r in range(fl.n_rounds):
+    start = 0
+    ckpt_dir = getattr(args, "ckpt_dir", None)
+    if ckpt_dir:
+        from repro.checkpoint.io import latest_step
+        if latest_step(ckpt_dir) is not None:
+            start = tr.restore_round_checkpoint(ckpt_dir)
+            print(f"[fl] resumed from {ckpt_dir} at round {start}")
+    for r in range(start, fl.n_rounds):
         t0 = _time.perf_counter()
         m = tr.run_round(r)
         print(f"  round {r}: val_loss={m.server_val_loss:.4f} "
               f"val_acc={m.server_val_acc:.3f} comm={m.comm_s:.2f}s "
               f"participants={m.participants} "
               f"({(_time.perf_counter() - t0) * 1e3:.0f} ms wall)")
+        if ckpt_dir:
+            tr.save_round_checkpoint(ckpt_dir)
     return tr
 
 
@@ -138,7 +147,10 @@ def run_fl(args):
     api = get_model(cfg)
     n_sats = args.sats
     if args.engine == "dist":
-        security = args.security
+        # the in-graph engine takes its security mode directly in
+        # make_fl_round; the config only needs a valid Algorithm-2 name
+        # whose != "none" gate matches (plan key/seed compilation)
+        security = "none" if args.security == "none" else "qkd"
     else:
         # host engine speaks Algorithm-2 mode names: the in-graph 'otp'
         # is the host's QKD-keyed OTP(+MAC); 'secagg' has no host

@@ -61,6 +61,69 @@ def test_checkpoint_shape_mismatch(tmp_path, rng_key):
         load_checkpoint(str(tmp_path), bad)
 
 
+def test_read_metadata_verifies_mac(tmp_path, rng_key):
+    from repro.checkpoint.io import read_metadata
+    tree = _tree(rng_key)
+    path = save_checkpoint(str(tmp_path), 9, tree, {"round": 9})
+    step, meta = read_metadata(str(tmp_path))
+    assert step == 9 and meta["round"] == 9
+    blob = bytearray(open(path, "rb").read())
+    blob[-50] ^= 0xFF                      # corrupt the payload
+    open(path, "wb").write(bytes(blob))
+    # metadata-only reads still fail LOUDLY on a corrupted payload
+    with pytest.raises((CheckpointCorrupt, Exception)):
+        read_metadata(str(tmp_path))
+
+
+def test_leftover_tmp_ignored_and_gced(tmp_path, rng_key):
+    """A .tmp from a torn write (process killed mid-save) must never be
+    picked up as a checkpoint, and the manager's GC removes it."""
+    import os
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree(rng_key)
+    mgr.save(1, tree)
+    torn = tmp_path / "step_00000002.msgpack.tmp"
+    torn.write_bytes(b"half-written garbage")
+    assert latest_step(str(tmp_path)) == 1     # .tmp is invisible
+    out, step, _ = mgr.restore(tree)
+    assert step == 1
+    mgr.save(2, tree)                          # save triggers _gc
+    assert not torn.exists()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_trainer_state_roundtrips_per_satellite(tmp_path):
+    """Host-trainer checkpoint carries per-satellite optimizer slots and
+    the full CommLog: restore into a fresh trainer reproduces both."""
+    import numpy as np
+    import test_async_buffer as tab
+    from repro.core import SatQFLConfig, SatQFLTrainer
+    from repro.models import get_config, get_model
+    cfg = get_config("vqc-satqfl").replace(vqc_qubits=2, vqc_layers=1,
+                                           n_features=2)
+    api = get_model(cfg)
+    sg = np.zeros((5, 3), bool)
+    sg[0, :] = True
+    ss = np.zeros((5, 5, 3), bool)
+    ss[1:, 0, :] = True
+    trace = tab.make_trace(sg, ss)
+    sats, server = tab.make_data(5, 0)
+    fl = SatQFLConfig(mode="sim", n_rounds=3, local_steps=2, batch_size=4,
+                      eval_every=10 ** 6, security="qkd")
+    tr = SatQFLTrainer(cfg, api, fl, trace, sats, server, batched=False)
+    tr.run_round(0)
+    tr.run_round(1)
+    tr.save_round_checkpoint(str(tmp_path))
+    fresh = SatQFLTrainer(cfg, api, fl, trace, sats, server, batched=False)
+    assert fresh.restore_round_checkpoint(str(tmp_path)) == 2
+    for a, b in zip(jax.tree_util.tree_leaves(tr.opt_states),
+                    jax.tree_util.tree_leaves(fresh.opt_states)):
+        assert bool(jnp.all(a == b))
+    assert fresh.log.round_details == tr.log.round_details
+    assert fresh.log.n_transfers == tr.log.n_transfers
+    assert fresh._qkd_established == tr._qkd_established
+
+
 # ---------------------------------------------------------------------------
 # HLO collective parser
 # ---------------------------------------------------------------------------
